@@ -1,0 +1,169 @@
+"""One benchmark per paper table/figure (§8), on WatDiv-like data.
+
+Emits CSV rows: ``bench,variant,metric,value``.  Absolute numbers are
+host-dependent; the paper's *claims* are orderings and trends, asserted
+in EXPERIMENTS.md §Paper-validation.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import (BaselineEngine, PartitionConfig, WorkloadPartitioner,
+                        generate_watdiv, generate_workload,
+                        shape_fragmentation, simulate_throughput,
+                        warp_fragmentation)
+from repro.core.workload import TEMPLATE_CLASS
+
+ROWS: List[Tuple[str, str, str, float]] = []
+
+
+def emit(bench: str, variant: str, metric: str, value: float) -> None:
+    ROWS.append((bench, variant, metric, value))
+    print(f"{bench},{variant},{metric},{value:.6g}")
+
+
+def _setup(n_triples=30_000, n_queries=2_000, sites=10, seed=1):
+    g = generate_watdiv(n_triples, seed=seed)
+    wl = generate_workload(g, n_queries, seed=seed + 1)
+    return g, wl
+
+
+def _engines(g, wl, sites=10):
+    vf = WorkloadPartitioner(g, wl, PartitionConfig(
+        kind="vertical", num_sites=sites)).run()
+    hf = WorkloadPartitioner(g, wl, PartitionConfig(
+        kind="horizontal", num_sites=sites)).run()
+    shape = shape_fragmentation(g, sites)
+    warp, _ = warp_fragmentation(g, sites, vf.selected_patterns)
+    return {
+        "VF": (vf.engine(), vf),
+        "HF": (hf.engine(), hf),
+        "SHAPE": (BaselineEngine(g, shape), shape),
+        "WARP": (BaselineEngine(g, warp,
+                                local_patterns=vf.selected_patterns), warp),
+    }
+
+
+# ----------------------------------------------------------------------
+# Fig. 8: effect of minSup on #FAPs and workload hit rate
+# ----------------------------------------------------------------------
+
+def bench_minsup() -> None:
+    g, wl = _setup()
+    for frac in [0.0005, 0.001, 0.005, 0.01, 0.05]:
+        pp = WorkloadPartitioner(g, wl, PartitionConfig(
+            min_sup_fraction=frac, num_sites=10)).run()
+        emit("fig8_minsup", f"{frac:g}", "num_faps", pp.stats.num_patterns_mined)
+        emit("fig8_minsup", f"{frac:g}", "hit_rate", pp.stats.hit_rate)
+
+
+# ----------------------------------------------------------------------
+# Fig. 9 / Fig. 10: throughput + response time per strategy
+# ----------------------------------------------------------------------
+
+def bench_throughput() -> None:
+    g, wl = _setup()
+    engines = _engines(g, wl)
+    sample = wl.queries[: len(wl.queries) // 10]   # paper samples 1%
+    for name, (eng, _) in engines.items():
+        thr, _ = simulate_throughput(eng, sample)
+        emit("fig9_throughput", name, "queries_per_min", thr)
+
+
+def bench_response() -> None:
+    g, wl = _setup()
+    engines = _engines(g, wl)
+    sample = wl.queries[: len(wl.queries) // 10]
+    for name, (eng, _) in engines.items():
+        rts = [eng.execute(q).stats.response_time for q in sample]
+        emit("fig10_response", name, "avg_response_sec", float(np.mean(rts)))
+        emit("fig10_response", name, "p95_response_sec",
+             float(np.percentile(rts, 95)))
+
+
+# ----------------------------------------------------------------------
+# Fig. 11: scalability with dataset size
+# ----------------------------------------------------------------------
+
+def bench_scalability() -> None:
+    for n in [10_000, 20_000, 40_000, 80_000]:
+        g, wl = _setup(n_triples=n, n_queries=800, seed=3)
+        pp = WorkloadPartitioner(g, wl, PartitionConfig(
+            kind="vertical", num_sites=10)).run()
+        eng = pp.engine()
+        sample = wl.queries[:80]
+        thr, _ = simulate_throughput(eng, sample)
+        rts = [eng.execute(q).stats.response_time for q in sample]
+        emit("fig11_scalability", f"{n}", "queries_per_min", thr)
+        emit("fig11_scalability", f"{n}", "avg_response_sec",
+             float(np.mean(rts)))
+
+
+# ----------------------------------------------------------------------
+# Table 1: redundancy ratios
+# ----------------------------------------------------------------------
+
+def bench_redundancy() -> None:
+    g, wl = _setup()
+    engines = _engines(g, wl)
+    for name, (_, obj) in engines.items():
+        if name in ("VF", "HF"):
+            r = obj.frag.redundancy_ratio(g)
+        else:
+            r = obj.redundancy_ratio(g)
+        emit("table1_redundancy", name, "ratio", r)
+
+
+# ----------------------------------------------------------------------
+# Table 2: partitioning (offline) time
+# ----------------------------------------------------------------------
+
+def bench_offline() -> None:
+    g, wl = _setup()
+    for kind in ["vertical", "horizontal"]:
+        t0 = time.perf_counter()
+        pp = WorkloadPartitioner(g, wl, PartitionConfig(
+            kind=kind, num_sites=10)).run()
+        total = time.perf_counter() - t0
+        s = pp.stats
+        name = "VF" if kind == "vertical" else "HF"
+        emit("table2_offline", name, "mine_sec", s.mine_sec)
+        emit("table2_offline", name, "select_sec", s.select_sec)
+        emit("table2_offline", name, "fragment_sec", s.fragment_sec)
+        emit("table2_offline", name, "allocate_sec", s.allocate_sec)
+        emit("table2_offline", name, "total_sec", total)
+    t0 = time.perf_counter()
+    shape_fragmentation(g, 10)
+    emit("table2_offline", "SHAPE", "total_sec", time.perf_counter() - t0)
+    pp = WorkloadPartitioner(g, wl, PartitionConfig(num_sites=10)).run()
+    t0 = time.perf_counter()
+    warp_fragmentation(g, 10, pp.selected_patterns)
+    emit("table2_offline", "WARP", "total_sec", time.perf_counter() - t0)
+
+
+# ----------------------------------------------------------------------
+# Fig. 12: per-query-class (L/S/F/C) response times
+# ----------------------------------------------------------------------
+
+def bench_queries() -> None:
+    g, wl = _setup()
+    engines = _engines(g, wl)
+    by_class: Dict[str, List[int]] = {}
+    for i, tid in enumerate(wl.template_ids or []):
+        if tid is None or tid < 0 or i >= 400:
+            continue
+        by_class.setdefault(TEMPLATE_CLASS[tid], []).append(i)
+    for cls in sorted(by_class):
+        idxs = by_class[cls][:25]
+        for name, (eng, _) in engines.items():
+            rts = [eng.execute(wl.queries[i]).stats.response_time
+                   for i in idxs]
+            emit("fig12_query_classes", f"{name}_{cls}", "avg_response_sec",
+                 float(np.mean(rts)))
+
+
+ALL = [bench_minsup, bench_throughput, bench_response, bench_scalability,
+       bench_redundancy, bench_offline, bench_queries]

@@ -1,0 +1,152 @@
+"""Roofline analysis (brief §Roofline): derive the three terms per
+(arch x shape x mesh) from the dry-run artifacts in reports/dryrun*/.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory term     = HBM_traffic_per_device / HBM_bw
+  collective term = collective_bytes_per_device / ICI_link_bw
+
+Hardware constants: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (brief-provided).
+
+Also reports MODEL_FLOPS (6*N*D dense / 6*N_active*D MoE; 2*N*D for
+prefill; 2*N_active*B per decode step) and the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs, which exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+
+# ----------------------------------------------------------------------
+# Analytic model FLOPs
+# ----------------------------------------------------------------------
+
+def _param_counts(cfg) -> Dict[str, float]:
+    """Total and active (per-token) parameter counts, excluding the
+    input embedding table (standard 6ND convention keeps the LM head)."""
+    from repro.models import get_api, param_count
+    from repro.models.common import ParamDef
+    import jax
+    defs = get_api(cfg).defs(cfg)
+    total = param_count(defs)
+    embed = 0
+    if "embed" in defs:
+        embed = int(np.prod(defs["embed"].shape))
+    # MoE: inactive experts do not contribute to per-token FLOPs
+    inactive = 0.0
+    if cfg.num_experts > 0:
+        E, K = cfg.num_experts, cfg.top_k
+        F = cfg.effective_moe_ff()
+        per_expert = 3 * cfg.d_model * F
+        n_moe_layers = cfg.num_layers
+        if cfg.family == "hybrid":
+            n_moe_layers = (cfg.num_layers // cfg.attn_every) * \
+                (cfg.attn_every // cfg.moe_every)
+        inactive = n_moe_layers * (E - K) * per_expert
+    n = total - embed
+    return {"total": float(total), "dense_equiv": float(n),
+            "active": float(n - inactive)}
+
+
+import numpy as np  # noqa: E402  (after docstring usage above)
+
+
+def model_flops(cfg, kind: str, seq: int, batch: int) -> float:
+    pc = _param_counts(cfg)
+    n_active = pc["active"]
+    tokens = batch * seq
+    if kind == "train":
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * batch          # decode: one token per sequence
+
+
+# ----------------------------------------------------------------------
+# Roofline rows from dry-run artifacts
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_ratio: float
+    mem_gb_per_device: float
+    step_time_s: float
+    roofline_fraction: float   # compute_s / max(term) -- MFU-style
+
+
+def analyze_report(rep: dict, chips: int) -> Optional[RooflineRow]:
+    from repro.configs import get_arch
+    if rep.get("skipped"):
+        return None
+    hc = rep["hlo_accounting"]
+    spec = get_arch(rep["arch"])
+    sh = spec.shape(rep["shape"])
+    compute_s = hc["flops_per_device"] / PEAK_FLOPS
+    memory_s = hc["hbm_traffic_bytes_per_device"] / HBM_BW
+    coll_s = sum(hc["collective_bytes"].values()) / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(spec.config, sh.kind, sh.seq_len, sh.global_batch)
+    ratio = mf / max(hc["flops_per_device"] * chips, 1.0)
+    mem = rep["memory"]
+    mem_gb = (mem["argument_bytes_per_device"]
+              + mem["temp_bytes_per_device"]) / 1e9
+    step = max(terms.values())
+    return RooflineRow(rep["arch"], rep["shape"], rep["mesh"], compute_s,
+                       memory_s, coll_s, dom, ratio, mem_gb, step,
+                       compute_s / step if step > 0 else 0.0)
+
+
+def load_rows(report_dir: str | Path) -> List[RooflineRow]:
+    rows = []
+    for f in sorted(Path(report_dir).glob("*.json")):
+        rep = json.loads(f.read_text())
+        chips = 512 if rep.get("mesh") == "2x16x16" else 256
+        r = analyze_report(rep, chips)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def print_table(rows: List[RooflineRow], only_mesh: Optional[str] = "16x16"
+                ) -> None:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':8s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'collect_s':>10s} {'dominant':>10s} "
+           f"{'MF/HLO':>7s} {'mem/dev':>8s} {'RF':>6s}")
+    print(hdr)
+    for r in rows:
+        if only_mesh and r.mesh != only_mesh:
+            continue
+        print(f"{r.arch:24s} {r.shape:12s} {r.mesh:8s} {r.compute_s:10.4f} "
+              f"{r.memory_s:10.4f} {r.collective_s:10.4f} {r.dominant:>10s} "
+              f"{r.model_flops_ratio:7.3f} {r.mem_gb_per_device:7.1f}G "
+              f"{r.roofline_fraction:6.3f}")
+
+
+def bench_roofline(report_dir: str = "reports/dryrun_baseline") -> None:
+    rows = load_rows(report_dir)
+    if not rows:
+        print(f"roofline,,status,no dry-run artifacts in {report_dir} "
+              f"(run python -m repro.launch.dryrun first)")
+        return
+    for r in rows:
+        tag = f"{r.arch}/{r.shape}/{r.mesh}"
+        print(f"roofline,{tag},compute_s,{r.compute_s:.6g}")
+        print(f"roofline,{tag},memory_s,{r.memory_s:.6g}")
+        print(f"roofline,{tag},collective_s,{r.collective_s:.6g}")
+        print(f"roofline,{tag},dominant,{r.dominant}")
+        print(f"roofline,{tag},roofline_fraction,{r.roofline_fraction:.4f}")

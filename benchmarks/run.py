@@ -1,0 +1,44 @@
+"""Benchmark harness: one function per paper table/figure + the roofline
+report from the dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.run                 # all
+  PYTHONPATH=src python -m benchmarks.run --only fig9     # substring match
+  PYTHONPATH=src python -m benchmarks.run --roofline-dir reports/dryrun_baseline
+
+Output: CSV rows ``bench,variant,metric,value``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on bench names")
+    ap.add_argument("--roofline-dir", default="reports/dryrun_baseline")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from . import paper_benches
+    from .roofline import bench_roofline
+
+    for fn in list(paper_benches.ALL):
+        name = fn.__name__
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        print(f"# --- {name} ---", file=sys.stderr)
+        fn()
+        print(f"# {name}: {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+
+    if not args.skip_roofline and (args.only is None
+                                   or "roofline" in args.only):
+        print("# --- roofline ---", file=sys.stderr)
+        bench_roofline(args.roofline_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: the paper's full pipeline in ~40 lines.
+
+Generates a WatDiv-like RDF graph + query workload, mines and selects
+frequent access patterns (Algorithm 1), builds a vertical fragmentation
+(Def. 10), allocates fragments to sites (Algorithm 2), and answers
+queries through the distributed engine (Algorithms 3+4) -- verifying the
+answers against direct matching on the whole graph.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (PartitionConfig, WorkloadPartitioner,
+                        generate_watdiv, generate_workload)
+from repro.core.matching import match_pattern
+
+
+def main() -> None:
+    # 1) data + workload
+    graph = generate_watdiv(20_000, seed=1)
+    workload = generate_workload(graph, 2_000, seed=2)
+    print(f"graph: {graph.num_edges} triples, {graph.num_vertices} vertices; "
+          f"workload: {len(workload)} queries")
+
+    # 2) offline phase: mine -> select -> fragment -> allocate
+    pp = WorkloadPartitioner(
+        graph, workload,
+        PartitionConfig(kind="vertical", num_sites=10)).run()
+    s = pp.stats
+    print(f"mined {s.num_patterns_mined} frequent access patterns, "
+          f"selected {s.num_patterns_selected} "
+          f"(hit rate {s.hit_rate:.1%}, redundancy {s.redundancy_ratio:.2f})")
+
+    # 3) online phase: answer queries, verify against direct matching
+    engine = pp.engine()
+    ok = 0
+    for q in workload.queries[:50]:
+        r = engine.execute(q)
+        want = match_pattern(graph, q).num_rows
+        assert r.num_rows == want, "engine answer mismatch!"
+        ok += 1
+    print(f"answered {ok}/50 queries exactly; "
+          f"example stats: sites_touched="
+          f"{len(engine.execute(workload.queries[0]).stats.sites_touched)}, "
+          f"comm_bytes={engine.execute(workload.queries[0]).stats.comm_bytes}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Serve a small model with batched requests: prefill + greedy decode
+over the KV/SSM cache (one full-attention arch, one attention-free).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import serve
+
+
+def main() -> None:
+    for arch in ["qwen3-1.7b", "rwkv6-1.6b"]:
+        r = serve(arch, batch=4, prompt_len=16, gen_len=24, smoke=True)
+        print(f"{arch:14s} generated {r.tokens.shape[0]}x{r.tokens.shape[1]} "
+              f"tokens, decode {r.tokens_per_sec:7.1f} tok/s "
+              f"(prefill {r.prefill_sec:.2f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Sharded checkpointing: save/restore + async writer."""
+from .ckpt import (CheckpointManager, load_checkpoint, save_checkpoint,
+                   latest_step)
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint",
+           "latest_step"]

@@ -1,0 +1,87 @@
+"""Architecture/shape registry: the 10 assigned (arch x shape) grids.
+
+Each arch module defines an ``ArchSpec``: the exact published config, a
+reduced smoke config (same family, tiny dims) for CPU tests, and the
+four assigned input shapes.  ``input_specs`` produces ShapeDtypeStruct
+stand-ins (weak-type-correct, shardable, no allocation) for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig, get_api
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+    skip: bool = False             # e.g. long_500k on full-attention archs
+    skip_reason: str = ""
+
+
+def lm_shapes(long_ok: bool, long_reason: str = "") -> Dict[str, ShapeSpec]:
+    return {
+        "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+        "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+        "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+        "long_500k": ShapeSpec(
+            "long_500k", 524288, 1, "decode", skip=not long_ok,
+            skip_reason="" if long_ok else
+            (long_reason or "pure full attention: O(seq) KV state at 500k "
+             "has no sub-quadratic path (DESIGN.md §5)")),
+    }
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    arch_id: str
+    config: ModelConfig
+    smoke: ModelConfig
+    shapes: Dict[str, ShapeSpec]
+    source: str = ""
+    notes: str = ""
+    # §Perf production profile: config overrides that encode the winning
+    # hillclimb changes (baseline stays the plain ``config``).
+    optimized: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    def shape(self, name: str) -> ShapeSpec:
+        return self.shapes[name]
+
+    def optimized_config(self) -> ModelConfig:
+        return dataclasses.replace(self.config, **self.optimized) \
+            if self.optimized else self.config
+
+
+# ----------------------------------------------------------------------
+
+def input_specs(spec: ArchSpec, shape_name: str,
+                smoke: bool = False) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = spec.smoke if smoke else spec.config
+    sh = spec.shapes[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    if smoke:
+        B, S = 2, min(S, 64)
+    api = get_api(cfg)
+    if sh.kind in ("train", "prefill"):
+        if cfg.embed_inputs:
+            ins = {"inputs": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                  cfg.dtype)}
+        else:
+            ins = {"inputs": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if sh.kind == "train":
+            ins["targets"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return ins
+    # decode: one new token against a cache of length seq_len
+    tok = (jax.ShapeDtypeStruct((B, cfg.d_model), cfg.dtype)
+           if cfg.embed_inputs else jax.ShapeDtypeStruct((B,), jnp.int32))
+    cache = api.init_cache(cfg, B, S, as_shape=True)
+    return {"token": tok, "cache": cache,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}

@@ -1,0 +1,47 @@
+"""Core library: the paper's contribution (workload-driven RDF graph
+fragmentation + allocation + distributed query processing).
+
+Pipeline (offline):
+    graph, workload
+      -> mining.mine_frequent_patterns        (§4)
+      -> selection.select_patterns            (§4.1, Algorithm 1)
+      -> fragmentation.build_fragmentation    (§5, vertical | horizontal)
+      -> allocation.allocate_fragments        (§6, Algorithm 2)
+      -> dictionary.DataDictionary.build      (§7.1)
+Online:
+    executor.DistributedEngine.execute        (§7.2-7.3, Algorithms 3+4)
+"""
+from .graph import RDFGraph, example_graph, generate_watdiv
+from .query import QueryGraph, is_subgraph_of, find_embedding
+from .workload import Workload, generate_workload, watdiv_templates
+from .mining import (FrequentPattern, mine_frequent_patterns,
+                     frequent_properties, usage_matrix)
+from .selection import SelectionResult, select_patterns
+from .fragmentation import (Fragment, Fragmentation, build_fragmentation,
+                            vertical_fragmentation, horizontal_fragmentation)
+from .allocation import (Allocation, affinity_matrix, allocate,
+                         allocate_fragments, allocate_experts)
+from .dictionary import DataDictionary
+from .decomposition import Decomposition, decompose
+from .optimizer import JoinPlan, optimize
+from .executor import (CostModel, DistributedEngine, QueryResult,
+                       simulate_throughput)
+from .baselines import (BaselineEngine, BaselineFragmentation,
+                        shape_fragmentation, warp_fragmentation)
+from .pipeline import WorkloadPartitioner, PartitionConfig
+
+__all__ = [
+    "RDFGraph", "example_graph", "generate_watdiv",
+    "QueryGraph", "is_subgraph_of", "find_embedding",
+    "Workload", "generate_workload", "watdiv_templates",
+    "FrequentPattern", "mine_frequent_patterns", "frequent_properties",
+    "usage_matrix", "SelectionResult", "select_patterns",
+    "Fragment", "Fragmentation", "build_fragmentation",
+    "vertical_fragmentation", "horizontal_fragmentation",
+    "Allocation", "affinity_matrix", "allocate", "allocate_fragments",
+    "allocate_experts", "DataDictionary", "Decomposition", "decompose",
+    "JoinPlan", "optimize", "CostModel", "DistributedEngine", "QueryResult",
+    "simulate_throughput", "BaselineEngine", "BaselineFragmentation",
+    "shape_fragmentation", "warp_fragmentation",
+    "WorkloadPartitioner", "PartitionConfig",
+]

@@ -1,0 +1,184 @@
+"""Fragment allocation (§6): affinity metric, allocation graph, and the
+PNN-variant greedy clustering of Algorithm 2.
+
+aff(F, F') = Σ_k use(Q_k, p) · use(Q_k, p')  (Def. 13) -- computed as one
+matmul U^T diag(w) U over the deduped usage matrix.
+
+The same machinery is reused for MoE expert placement (DESIGN.md §5):
+experts are "fragments", token-level co-activation is the workload, and
+Algorithm 2 clusters co-activated experts onto the same shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .fragmentation import Fragment, Fragmentation
+
+
+@dataclasses.dataclass
+class Allocation:
+    """A = {A_1..A_m}: partition of fragment indices onto m sites (Def. 4)."""
+    site_of: np.ndarray           # fragment index -> site id
+    num_sites: int
+
+    def groups(self) -> List[List[int]]:
+        out: List[List[int]] = [[] for _ in range(self.num_sites)]
+        for fi, s in enumerate(self.site_of):
+            out[int(s)].append(fi)
+        return out
+
+    def is_partition(self, num_fragments: int) -> bool:
+        """Def. 4 invariants: total, disjoint (by construction), non-neg."""
+        return (len(self.site_of) == num_fragments
+                and (self.site_of >= 0).all()
+                and (self.site_of < self.num_sites).all())
+
+
+def affinity_matrix(usage: np.ndarray, weights: Optional[np.ndarray] = None
+                    ) -> np.ndarray:
+    """aff between all pattern pairs: U^T diag(w) U (Def. 13)."""
+    U = usage.astype(np.float64)
+    if weights is not None:
+        U = U * np.sqrt(weights.astype(np.float64))[:, None]
+    return U.T @ U
+
+
+def fragment_affinity(frag: Fragmentation, usage: np.ndarray,
+                      weights: Optional[np.ndarray] = None) -> np.ndarray:
+    """Lift pattern-level affinity to fragments.  Vertical fragments map
+    1:1 to patterns; horizontal fragments inherit their pattern's
+    affinities (minterm usage refines pattern usage; queries that use the
+    same pattern with compatible constants co-access the minterms)."""
+    pat_aff = affinity_matrix(usage, weights)
+    pidx = np.array([f.pattern_idx for f in frag.fragments], dtype=np.int64)
+    A = pat_aff[np.ix_(pidx, pidx)]
+    if frag.kind == "horizontal":
+        # distinct minterms of the same pattern are accessed *instead of*
+        # each other for point queries -> damp their mutual affinity
+        same = pidx[:, None] == pidx[None, :]
+        A = np.where(same, A * 0.5, A)
+    np.fill_diagonal(A, 0.0)
+    return A
+
+
+# ----------------------------------------------------------------------
+# Algorithm 2 (PNN variant)
+# ----------------------------------------------------------------------
+
+def allocate(A: np.ndarray, num_sites: int,
+             sizes: Optional[np.ndarray] = None,
+             balance_factor: float = 0.0) -> Allocation:
+    """Algorithm 2: start with singleton clusters; repeatedly merge the
+    pair with the highest merge weight (density of the merged cluster)
+    until m clusters remain.
+
+    Incremental PNN: cross-cluster weights W[a,b], internal weights and
+    sizes are maintained across merges, so each step is O(n) update +
+    O(n^2) argmax -- O(n^3) total with a vectorized inner loop.
+
+    ``balance_factor`` > 0 adds a beyond-paper size-balancing penalty
+    (density - bf * merged_size/total_size); 0 = faithful to the paper.
+    """
+    n = A.shape[0]
+    if num_sites >= n:
+        return Allocation(np.arange(n, dtype=np.int64), max(num_sites, n))
+    clusters: List[List[int]] = [[i] for i in range(n)]
+    csize = (sizes.astype(np.float64).copy() if sizes is not None
+             else np.ones(n))
+    total_size = float(csize.sum())
+    W = A.astype(np.float64).copy()          # cross-cluster weight
+    np.fill_diagonal(W, 0.0)
+    internal = np.zeros(n)                    # internal weight per cluster
+    count = np.ones(n)                        # member count per cluster
+    alive = np.ones(n, dtype=bool)
+
+    def merge_score() -> np.ndarray:
+        # density of every candidate merged pair, vectorized
+        mi = internal[:, None] + internal[None, :] + W
+        mc = count[:, None] + count[None, :]
+        dens = mi / (mc * (mc - 1) / 2.0)
+        if balance_factor > 0.0:
+            dens = dens - balance_factor * (csize[:, None] + csize[None, :]) / total_size
+        dens = np.where(alive[:, None] & alive[None, :], dens, -np.inf)
+        np.fill_diagonal(dens, -np.inf)
+        return dens
+
+    remaining = n
+    while remaining > num_sites:
+        dens = merge_score()
+        a, b = np.unravel_index(int(np.argmax(dens)), dens.shape)
+        a, b = int(min(a, b)), int(max(a, b))
+        clusters[a] = clusters[a] + clusters[b]
+        internal[a] = internal[a] + internal[b] + W[a, b]
+        count[a] += count[b]
+        csize[a] += csize[b]
+        W[a, :] += W[b, :]
+        W[:, a] += W[:, b]
+        W[a, a] = 0.0
+        alive[b] = False
+        W[b, :] = 0.0
+        W[:, b] = 0.0
+        remaining -= 1
+
+    site_of = np.zeros(n, dtype=np.int64)
+    sid = 0
+    for ci in range(n):
+        if alive[ci]:
+            site_of[clusters[ci]] = sid
+            sid += 1
+    return Allocation(site_of, num_sites)
+
+
+def allocate_fragments(frag: Fragmentation, usage: np.ndarray,
+                       weights: np.ndarray, num_sites: int,
+                       balance_factor: float = 0.0) -> Allocation:
+    """End-to-end §6 for a Fragmentation; cold fragments are appended
+    round-robin (black box)."""
+    A = fragment_affinity(frag, usage, weights)
+    sizes = np.array([f.size for f in frag.fragments], dtype=np.float64)
+    return allocate(A, num_sites, sizes, balance_factor)
+
+
+# ----------------------------------------------------------------------
+# Bridge: expert placement for MoE architectures (DESIGN.md §5)
+# ----------------------------------------------------------------------
+
+def allocate_experts(coactivation: np.ndarray, num_shards: int,
+                     balance_factor: float = 0.25) -> np.ndarray:
+    """Cluster experts by token co-activation (Def. 13 with tokens as
+    queries and experts as fragments) onto shards.  Balanced by default:
+    expert shards must hold equal parameter bytes.
+
+    Returns expert -> shard assignment with exactly E/num_shards experts
+    per shard (round-robin rebalance after Algorithm 2 clustering).
+    """
+    E = coactivation.shape[0]
+    A = coactivation.astype(np.float64).copy()
+    np.fill_diagonal(A, 0.0)
+    alloc = allocate(A, num_shards, sizes=np.ones(E), balance_factor=balance_factor)
+    # enforce exact balance: move overflow experts (lowest internal
+    # affinity first) to underfull shards
+    per = E // num_shards
+    groups = alloc.groups()
+    overflow: List[int] = []
+    for g in groups:
+        while len(g) > per:
+            # evict the member with least affinity to the rest of g
+            aff_in = [(float(A[e, g].sum()), e) for e in g]
+            aff_in.sort()
+            e = aff_in[0][1]
+            g.remove(e)
+            overflow.append(e)
+    out = np.zeros(E, dtype=np.int64)
+    for sid, g in enumerate(groups):
+        for e in g:
+            out[e] = sid
+    for sid, g in enumerate(groups):
+        while len(g) < per and overflow:
+            e = overflow.pop()
+            g.append(e)
+            out[e] = sid
+    return out

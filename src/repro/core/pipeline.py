@@ -1,0 +1,140 @@
+"""End-to-end offline pipeline (Fig. 3 system architecture, offline phase):
+mine -> select -> fragment -> allocate -> dictionary, bundled into one
+object the online engine and the benchmarks consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .allocation import Allocation, allocate_fragments
+from .decomposition import decompose
+from .dictionary import DataDictionary
+from .executor import CostModel, DistributedEngine
+from .fragmentation import Fragmentation, build_fragmentation
+from .graph import RDFGraph
+from .mining import (FrequentPattern, frequent_properties,
+                     mine_frequent_patterns_deduped, usage_matrix)
+from .query import QueryGraph
+from .selection import SelectionResult, select_patterns
+from .matching import _PropIndex, count_matches, match_edge_ids
+from .workload import Workload
+
+
+@dataclasses.dataclass
+class PartitionConfig:
+    min_sup_fraction: float = 0.001   # minSup as a fraction of |Q| (§8.2)
+    theta_fraction: float = 0.001     # hot-property threshold (Def. 5)
+    storage_factor: float = 1.6       # SC = factor * |E(hot)| (§4.1.2)
+    kind: str = "vertical"            # vertical | horizontal
+    num_sites: int = 10               # paper's cluster size
+    max_pattern_edges: int = 6
+    per_pattern_predicates: int = 2   # simple predicates per FAP (§5.2)
+    num_cold_parts: int = 2
+    balance_factor: float = 0.0       # 0 = faithful Algorithm 2
+    max_rows: int = 5_000_000
+
+
+@dataclasses.dataclass
+class OfflineStats:
+    mine_sec: float
+    select_sec: float
+    fragment_sec: float
+    allocate_sec: float
+    num_patterns_mined: int
+    num_patterns_selected: int
+    num_fragments: int
+    redundancy_ratio: float
+    hit_rate: float                    # fraction of workload hit by FAPs
+    benefit: float
+
+
+class WorkloadPartitioner:
+    """Owns the offline phase; produces a ready DistributedEngine."""
+
+    def __init__(self, graph: RDFGraph, workload: Workload,
+                 config: Optional[PartitionConfig] = None):
+        self.graph = graph
+        self.workload = workload
+        self.cfg = config or PartitionConfig()
+        self.stats: Optional[OfflineStats] = None
+        self.frag: Optional[Fragmentation] = None
+        self.alloc: Optional[Allocation] = None
+        self.dict: Optional[DataDictionary] = None
+        self.selected_patterns: List[QueryGraph] = []
+        self.cold_props: Set[int] = set()
+
+    # ------------------------------------------------------------------
+    def run(self) -> "WorkloadPartitioner":
+        cfg = self.cfg
+        g, wl = self.graph, self.workload
+        min_sup = max(int(len(wl) * cfg.min_sup_fraction), 1)
+        theta = max(int(len(wl) * cfg.theta_fraction), 1)
+
+        # --- mine (§4) ---
+        t0 = time.perf_counter()
+        uniq, weights = wl.dedup_normalized()
+        fps = mine_frequent_patterns_deduped(uniq, weights, min_sup,
+                                             cfg.max_pattern_edges)
+        t_mine = time.perf_counter() - t0
+
+        # ensure integrity: add 1-edge patterns for every frequent property
+        fprops = frequent_properties(wl, theta)
+        have = {fp.pattern.canonical_code(): True for fp in fps
+                if fp.num_edges == 1}
+        for prop in fprops:
+            pat = QueryGraph.make([(-1, -2, prop)])
+            if pat.canonical_code() not in have:
+                sup = sum(int(w) for q, w in zip(uniq, weights)
+                          if prop in q.properties())
+                fps.append(FrequentPattern(pat, sup, set()))
+        self.cold_props = set(range(g.num_properties)) - set(fprops)
+
+        # --- select (§4.1) ---
+        t0 = time.perf_counter()
+        patterns = [fp.pattern for fp in fps]
+        U = usage_matrix(patterns, uniq)
+        idx = _PropIndex(g)
+        frag_sizes = np.array(
+            [len(match_edge_ids(g, p, index=idx, max_rows=cfg.max_rows))
+             for p in patterns], dtype=np.int64)
+        hot_ids, _ = g.hot_cold_split(fprops)
+        sc = max(int(len(hot_ids) * cfg.storage_factor),
+                 int(frag_sizes[[i for i, fp in enumerate(fps)
+                                 if fp.num_edges == 1]].sum()) + 1)
+        sel = select_patterns(fps, U, weights, frag_sizes, sc, fprops)
+        self.selection = sel
+        self.selected_patterns = [patterns[i] for i in sel.selected]
+        sel_U = U[:, sel.selected]
+        t_sel = time.perf_counter() - t0
+
+        # --- fragment (§5) ---
+        t0 = time.perf_counter()
+        self.frag = build_fragmentation(
+            g, wl, self.selected_patterns, theta, cfg.kind,
+            cfg.num_cold_parts, cfg.per_pattern_predicates, cfg.max_rows)
+        t_frag = time.perf_counter() - t0
+
+        # --- allocate (§6) ---
+        t0 = time.perf_counter()
+        self.alloc = allocate_fragments(self.frag, sel_U, weights,
+                                        cfg.num_sites, cfg.balance_factor)
+        self.dict = DataDictionary.build(g, self.frag, self.alloc,
+                                         cfg.num_sites)
+        t_alloc = time.perf_counter() - t0
+
+        hit = float((sel_U.max(axis=1) > 0) @ weights) / max(weights.sum(), 1)
+        self.stats = OfflineStats(
+            t_mine, t_sel, t_frag, t_alloc, len(fps), len(sel.selected),
+            len(self.frag.fragments), self.frag.redundancy_ratio(g),
+            float(hit), sel.benefit)
+        return self
+
+    # ------------------------------------------------------------------
+    def engine(self, cost: Optional[CostModel] = None) -> DistributedEngine:
+        assert self.frag is not None, "run() first"
+        return DistributedEngine(self.graph, self.frag, self.alloc,
+                                 self.dict, self.cold_props, cost)

@@ -1,0 +1,254 @@
+"""SPMD distributed subgraph matching: sites = devices on a mesh axis.
+
+This is the TPU-native rendering of the paper's online phase (§7.3):
+every site holds its allocated fragments as dense, predicate-sorted edge
+tables; a subquery runs as the *same* program on every site over its
+local shard (shard_map), producing fixed-capacity binding tables; joins
+across subqueries gather the smaller side (``all_gather`` broadcast
+join, DESIGN.md §3).
+
+Shapes are static everywhere (capacity + valid-count), so the whole
+query plan jits and the production-mesh dry-run can lower/compile it.
+The blocked probe kernels from repro.kernels drive the expansion steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels import ref as kref
+from .fragmentation import Fragmentation
+from .graph import RDFGraph
+from .query import QueryGraph, _connected_edge_order
+
+
+# ----------------------------------------------------------------------
+# Site-sharded storage
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SiteStore:
+    """Per-site edge storage, padded to uniform shape for SPMD.
+
+    s/p/o: (num_sites, E_max) int32, padded with -1 (never matches).
+    sorted by (p, s) within each site so searchsorted probes work.
+    """
+    s: jax.Array
+    p: jax.Array
+    o: jax.Array
+    num_sites: int
+    e_max: int
+
+    @staticmethod
+    def build(graph: RDFGraph, site_edge_ids: Sequence[np.ndarray],
+              pad_multiple: int = 512) -> "SiteStore":
+        m = len(site_edge_ids)
+        e_max = max((len(e) for e in site_edge_ids), default=1)
+        e_max = int(np.ceil(max(e_max, 1) / pad_multiple) * pad_multiple)
+        S = np.full((m, e_max), -1, np.int32)
+        Pm = np.full((m, e_max), -1, np.int32)
+        O = np.full((m, e_max), -1, np.int32)
+        for j, eids in enumerate(site_edge_ids):
+            eids = np.asarray(eids, np.int64)
+            s, p, o = graph.s[eids], graph.p[eids], graph.o[eids]
+            order = np.lexsort((o, s, p))
+            n = len(eids)
+            S[j, :n], Pm[j, :n], O[j, :n] = s[order], p[order], o[order]
+        return SiteStore(jnp.asarray(S), jnp.asarray(Pm), jnp.asarray(O),
+                         m, e_max)
+
+    @staticmethod
+    def from_fragmentation(graph: RDFGraph, frag: Fragmentation,
+                           site_of: np.ndarray, num_sites: int,
+                           include_cold: bool = True) -> "SiteStore":
+        per_site: List[np.ndarray] = []
+        for j in range(num_sites):
+            ids = [f.edge_ids for fi, f in enumerate(frag.fragments)
+                   if int(site_of[fi]) == j]
+            if include_cold:
+                ids += [f.edge_ids for k, f in enumerate(frag.cold_fragments)
+                        if k % num_sites == j]
+            per_site.append(np.unique(np.concatenate(ids))
+                            if ids else np.zeros(0, np.int64))
+        return SiteStore.build(graph, per_site)
+
+
+# ----------------------------------------------------------------------
+# Local (per-site) fixed-capacity pattern matching
+# ----------------------------------------------------------------------
+
+def _edge_table_for_prop(s: jax.Array, p: jax.Array, o: jax.Array,
+                         prop: int) -> Tuple[jax.Array, jax.Array]:
+    """(keys, payload) of this property's edges, sorted by subject;
+    non-matching rows pushed to +inf sentinel."""
+    sel = p == prop
+    keys = jnp.where(sel, s, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(keys)
+    return keys[order], o[order]
+
+
+def _expand_fixed(bind: jax.Array, valid: jax.Array, col_vals: jax.Array,
+                  keys_sorted: jax.Array, payload: jax.Array,
+                  capacity: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Join-expand a binding table against a sorted (keys -> payload)
+    edge table with a fixed output capacity.
+
+    bind: (C, V) int32; valid: (C,) bool; col_vals: (C,) probe keys.
+    Returns (new_bind (C', V), new_payload_col (C',), new_valid (C',))
+    where C' = capacity.  Overflow rows are dropped (counted upstream).
+    """
+    C, V = bind.shape
+    probe = jnp.where(valid, col_vals, jnp.iinfo(jnp.int32).max)
+    lo = jnp.searchsorted(keys_sorted, probe, side="left")
+    hi = jnp.searchsorted(keys_sorted, probe, side="right")
+    cnt = jnp.where(valid, hi - lo, 0)
+    start = jnp.cumsum(cnt) - cnt                     # output offsets
+    total = start[-1] + cnt[-1] if C else 0
+    # inverse map: output slot t -> source row r
+    t = jnp.arange(capacity)
+    r = jnp.searchsorted(start, t, side="right") - 1
+    r = jnp.clip(r, 0, C - 1)
+    k = t - start[r]
+    ok = (t < total) & (k < cnt[r])
+    src = jnp.clip(lo[r] + k, 0, keys_sorted.shape[0] - 1)
+    new_col = jnp.where(ok, payload[src], -1)
+    new_bind = jnp.where(ok[:, None], bind[r], -1)
+    return new_bind, new_col, ok
+
+
+def local_match(s: jax.Array, p: jax.Array, o: jax.Array,
+                pattern: QueryGraph, capacity: int
+                ) -> Tuple[jax.Array, jax.Array, List[int]]:
+    """All matches of ``pattern`` over one site's edge table, padded to
+    ``capacity`` rows.  Returns (bindings (capacity, V), valid, var_order).
+
+    jit-friendly: static pattern, static capacity.
+    """
+    order = _connected_edge_order(pattern)
+    edges = pattern.edges
+    var_cols: List[int] = []
+
+    def col_idx(v: int) -> int:
+        return var_cols.index(v)
+
+    bind = jnp.full((capacity, 0), -1, jnp.int32)
+    valid = jnp.zeros((capacity,), bool)
+
+    for step, ei in enumerate(order):
+        e = edges[ei]
+        keys, payload = _edge_table_for_prop(s, p, o, e.prop)
+        s_known = e.src >= 0 or e.src in var_cols
+        d_known = e.dst >= 0 or e.dst in var_cols
+
+        if step == 0:
+            # initialize from the property's edge list
+            sel = (p == e.prop)
+            if e.src >= 0:
+                sel &= s == e.src
+            if e.dst >= 0:
+                sel &= o == e.dst
+            if e.src < 0 and e.src == e.dst:
+                sel &= s == o
+            idx = jnp.nonzero(sel, size=capacity, fill_value=-1)[0]
+            valid = idx >= 0
+            idxc = jnp.clip(idx, 0, s.shape[0] - 1)
+            cols = []
+            if e.src < 0:
+                var_cols.append(e.src)
+                cols.append(jnp.where(valid, s[idxc], -1))
+            if e.dst < 0 and e.dst != e.src:
+                var_cols.append(e.dst)
+                cols.append(jnp.where(valid, o[idxc], -1))
+            bind = (jnp.stack(cols, axis=1) if cols
+                    else jnp.zeros((capacity, 0), jnp.int32)).astype(jnp.int32)
+            continue
+
+        if s_known and d_known:
+            sv = (jnp.full((capacity,), e.src, jnp.int32) if e.src >= 0
+                  else bind[:, col_idx(e.src)])
+            dv = (jnp.full((capacity,), e.dst, jnp.int32) if e.dst >= 0
+                  else bind[:, col_idx(e.dst)])
+            # membership of (sv, dv) among this property's edges:
+            # key-compose and probe the composed sorted table
+            nv = jnp.int64(2) ** 21  # vertex ids < 2^21 (enforced upstream)
+            pair_keys = jnp.sort(jnp.where(keys < jnp.iinfo(jnp.int32).max,
+                                           keys.astype(jnp.int64) * nv +
+                                           payload.astype(jnp.int64),
+                                           jnp.iinfo(jnp.int64).max))
+            probes = sv.astype(jnp.int64) * nv + dv.astype(jnp.int64)
+            pos = jnp.clip(jnp.searchsorted(pair_keys, probes), 0,
+                           pair_keys.shape[0] - 1)
+            hit = pair_keys[pos] == probes
+            valid = valid & hit
+            bind = jnp.where(valid[:, None], bind, -1)
+        elif s_known:
+            sv = (jnp.full((capacity,), e.src, jnp.int32) if e.src >= 0
+                  else bind[:, col_idx(e.src)])
+            bind, new_col, valid = _expand_fixed(bind, valid, sv, keys,
+                                                 payload, capacity)
+            if e.dst < 0:
+                var_cols.append(e.dst)
+                bind = jnp.concatenate([bind, new_col[:, None]], axis=1)
+            else:
+                valid = valid & (new_col == e.dst)
+                bind = jnp.where(valid[:, None], bind, -1)
+        else:  # d_known only: probe object-sorted table
+            sel = p == e.prop
+            okeys = jnp.where(sel, o, jnp.iinfo(jnp.int32).max)
+            oorder = jnp.argsort(okeys)
+            okeys_s, opayload = okeys[oorder], s[oorder]
+            dv = (jnp.full((capacity,), e.dst, jnp.int32) if e.dst >= 0
+                  else bind[:, col_idx(e.dst)])
+            bind, new_col, valid = _expand_fixed(bind, valid, dv, okeys_s,
+                                                 opayload, capacity)
+            if e.src < 0:
+                var_cols.append(e.src)
+                bind = jnp.concatenate([bind, new_col[:, None]], axis=1)
+            else:
+                valid = valid & (new_col == e.src)
+                bind = jnp.where(valid[:, None], bind, -1)
+
+    return bind, valid, var_cols
+
+
+# ----------------------------------------------------------------------
+# shard_map distributed execution
+# ----------------------------------------------------------------------
+
+def make_spmd_matcher(mesh: Mesh, axis: str, pattern: QueryGraph,
+                      capacity: int):
+    """Build a jitted SPMD function: site-sharded (s,p,o) -> gathered
+    binding tables (num_sites * capacity, V) + validity mask.
+
+    The all_gather is the paper's 'ship intermediate results' step;
+    its bytes are what the §Roofline collective term counts.
+    """
+    def per_site(s, p, o):
+        bind, valid, cols = local_match(s[0], p[0], o[0], pattern, capacity)
+        g_bind = jax.lax.all_gather(bind, axis, tiled=True)
+        g_valid = jax.lax.all_gather(valid, axis, tiled=True)
+        return g_bind, g_valid
+
+    fn = jax.shard_map(per_site, mesh=mesh,
+                       in_specs=(P(axis, None), P(axis, None), P(axis, None)),
+                       out_specs=(P(), P()), check_vma=False)
+    return jax.jit(fn)
+
+
+def spmd_match(store: SiteStore, mesh: Mesh, axis: str,
+               pattern: QueryGraph, capacity: int = 4096
+               ) -> Tuple[np.ndarray, List[int]]:
+    """Run the SPMD matcher and return deduped host-side bindings."""
+    fn = make_spmd_matcher(mesh, axis, pattern, capacity)
+    bind, valid = jax.device_get(fn(store.s, store.p, store.o))
+    _, _, cols = local_match(store.s[0], store.p[0], store.o[0], pattern, 1)
+    rows = bind[np.asarray(valid)]
+    if rows.size:
+        rows = np.unique(rows, axis=0)
+    return rows, cols

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Kernels (each: <name>.py kernel body, ops.py jit wrapper, ref.py oracle):
+  semijoin        -- blocked sort-merge membership probe (match hot loop)
+  semijoin(count) -- join multiplicity counting (expansion offsets)
+  flash_attention -- causal/SWA/GQA blocked attention (LM stack)
+
+Validated on CPU via interpret=True; compiled natively on TPU.
+"""
+from .ops import attention, join_count, semijoin
+from . import ref
+
+__all__ = ["attention", "join_count", "semijoin", "ref"]

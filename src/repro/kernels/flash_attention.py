@@ -1,0 +1,137 @@
+"""Blocked (flash) attention Pallas kernel: causal + sliding-window + GQA.
+
+This is the dominant-FLOPs kernel of the LM stack (train_4k/prefill_32k
+shapes).  TPU-native layout decisions:
+
+* grid = (B*Hq, Sq/BQ, Skv/BK) with the KV dimension innermost, so the
+  running softmax statistics live in VMEM scratch across KV steps and the
+  output block is written exactly once (on the last KV step).
+* Q/K/V blocks are (BQ, D) / (BK, D) with D the full head dim (128 for
+  every assigned arch -- MXU-aligned); s = q @ k^T hits the MXU at
+  (BQ=128..512, D=128) x (D, BK=128..512).
+* GQA is folded into the K/V BlockSpec index_map (q-head h reads kv-head
+  h // group), so no repeated K/V materialization in HBM.
+* causal/sliding-window blocks that are fully masked are skipped with
+  pl.when (their loads still stream, but no FLOPs -- on real TPU the
+  bound is the mask-aware grid; see EXPERIMENTS.md §Perf for the
+  follow-up that trims the grid itself).
+
+fp32 accumulation; inputs/outputs bf16 or fp32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref,
+                 m_ref, l_ref, acc_ref,
+                 *, causal: bool, window: Optional[int], scale: float,
+                 bq: int, bk: int, sq: int, skv: int):
+    i = pl.program_id(1)          # q block
+    j = pl.program_id(2)          # kv block
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute positions (queries occupy the last sq slots of the timeline)
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (skv - sq)
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # block-level visibility test (skip fully-masked blocks)
+    q_lo = i * bq + (skv - sq)
+    q_hi = q_lo + bq - 1
+    k_lo = j * bk
+    visible = True
+    if causal:
+        visible = jnp.logical_and(visible, k_lo <= q_hi)
+    if window is not None:
+        k_hi = k_lo + bk - 1
+        visible = jnp.logical_and(visible, k_hi > q_lo - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, :, :].astype(jnp.float32)      # (BQ, D)
+        k = k_ref[0, :, :].astype(jnp.float32)      # (BK, D)
+        v = v_ref[0, :, :].astype(jnp.float32)      # (BK, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((bq, bk), dtype=bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                          # (BQ, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                       # (BQ, BK)
+        alpha = jnp.exp(m_prev - m_new)              # (BQ, 1)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = DEFAULT_BQ, block_k: int = DEFAULT_BK,
+                    interpret: bool = True) -> jax.Array:
+    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D].  Returns [B, Hq, Sq, D].
+
+    Sq and Skv must be multiples of the block sizes (ops.py pads).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0, "GQA requires Hq % Hkv == 0"
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0
+
+    qq = q.reshape(B * Hq, Sq, D)
+    kk = k.reshape(B * Hkv, Skv, D)
+    vv = v.reshape(B * Hkv, Skv, D)
+
+    grid = (B * Hq, Sq // bq, Skv // bk)
+    kern = functools.partial(_attn_kernel, causal=causal, window=window,
+                             scale=scale, bq=bq, bk=bk, sq=Sq, skv=Skv)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, i, j: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, i, j: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        interpret=interpret,
+    )(qq, kk, vv)
+    return out.reshape(B, Hq, Sq, D)

@@ -1,0 +1,141 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Each op pads/blocks its inputs, dispatches to the kernel (interpret mode
+on non-TPU backends so the kernel *body* is what gets validated), and
+un-pads the result.  ``ref.py`` holds the oracles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .flash_attention import flash_attention
+from .semijoin import BM, BN, semijoin_blocks
+
+INT32_MAX = np.iinfo(np.int32).max
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret_default(interpret: Optional[bool]) -> bool:
+    return (not _on_tpu()) if interpret is None else interpret
+
+
+# ----------------------------------------------------------------------
+# Semi-join membership / join count
+# ----------------------------------------------------------------------
+
+def _prep_blocks(queries: jax.Array, table_sorted: jax.Array,
+                 bm: int, bn: int):
+    """Sort+pad the query side, pad the table, compute the block plan.
+
+    The plan (first overlapping table block per query block, max overlap
+    width) is data-dependent metadata computed on host -- the paper's
+    control-site role.  The heavy compare runs in the kernel.
+    """
+    order = jnp.argsort(queries)
+    qs = queries[order]
+    nq = qs.shape[0]
+    pad_q = (-nq) % bm
+    qs_p = jnp.concatenate([qs, jnp.full((pad_q,), INT32_MAX, qs.dtype)]) \
+        if pad_q else qs
+    nt = table_sorted.shape[0]
+    pad_t = (-nt) % bn
+    ts_p = jnp.concatenate([table_sorted,
+                            jnp.full((pad_t,), INT32_MAX, table_sorted.dtype)]) \
+        if pad_t else table_sorted
+
+    nqb = qs_p.shape[0] // bm
+    ntb = ts_p.shape[0] // bn
+    qmin = qs_p[::bm]
+    qmax = qs_p[bm - 1::bm]
+    lo = (jnp.searchsorted(ts_p, qmin, side="left") // bn).astype(jnp.int32)
+    hi = (jnp.clip(jnp.searchsorted(ts_p, qmax, side="right") - 1, 0, None)
+          // bn).astype(jnp.int32)
+    lo = jnp.minimum(lo, ntb - 1)
+    widths = jnp.maximum(hi - lo + 1, 1).astype(jnp.int32)
+    width = int(jax.device_get(jnp.max(widths))) if nqb else 1
+    return (order, qs_p.reshape(nqb, bm), ts_p.reshape(ntb, bn), lo, widths,
+            max(width, 1), nq)
+
+
+def semijoin(queries: jax.Array, table_sorted: jax.Array,
+             interpret: Optional[bool] = None,
+             bm: int = BM, bn: int = BN) -> jax.Array:
+    """Boolean mask: queries[i] present in sorted table.  Kernel-backed."""
+    queries = queries.astype(jnp.int32)
+    table_sorted = table_sorted.astype(jnp.int32)
+    if queries.shape[0] == 0 or table_sorted.shape[0] == 0:
+        return jnp.zeros(queries.shape, dtype=bool)
+    order, q2d, t2d, lo, widths, width, nq = _prep_blocks(queries, table_sorted, bm, bn)
+    got = semijoin_blocks(q2d, t2d, lo, widths, width, count=False,
+                          interpret=_interpret_default(interpret))
+    mask_sorted = got.reshape(-1)[:nq] > 0
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(nq))
+    return mask_sorted[inv]
+
+
+def join_count(queries: jax.Array, table_sorted: jax.Array,
+               interpret: Optional[bool] = None,
+               bm: int = BM, bn: int = BN) -> jax.Array:
+    """counts[i] = multiplicity of queries[i] in the sorted table."""
+    queries = queries.astype(jnp.int32)
+    table_sorted = table_sorted.astype(jnp.int32)
+    if queries.shape[0] == 0 or table_sorted.shape[0] == 0:
+        return jnp.zeros(queries.shape, dtype=jnp.int32)
+    order, q2d, t2d, lo, widths, width, nq = _prep_blocks(queries, table_sorted, bm, bn)
+    got = semijoin_blocks(q2d, t2d, lo, widths, width, count=True,
+                          interpret=_interpret_default(interpret))
+    cnt_sorted = got.reshape(-1)[:nq]
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(nq))
+    return cnt_sorted[inv]
+
+
+# ----------------------------------------------------------------------
+# Attention
+# ----------------------------------------------------------------------
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = True, window: Optional[int] = None,
+              scale: Optional[float] = None,
+              block_q: int = 128, block_k: int = 128,
+              interpret: Optional[bool] = None,
+              use_kernel: bool = True) -> jax.Array:
+    """Kernel-backed attention with padding to block multiples.
+
+    Falls back to the jnp oracle when ``use_kernel=False`` (used by the
+    dry-run path, where XLA's fused attention is what we cost-model) or
+    for tiny shapes.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    if not use_kernel or Sq * Skv <= 128 * 128:
+        return ref.attention_ref(q, k, v, causal, window, scale)
+    bq = min(block_q, max(8, Sq))
+    bk = min(block_k, max(8, Skv))
+    if Sq % bq == 0 and Skv % bk == 0:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, block_q=bq, block_k=bk,
+                               interpret=_interpret_default(interpret))
+    if causal and Sq == Skv:
+        # pad q and kv equally at the END of the timeline: real queries
+        # keep positions 0..Sq-1 and never attend padded keys (causal
+        # mask: padded key positions >= Sq > any real query position).
+        step = int(np.lcm(bq, bk))
+        pad = (-Sq) % step
+        qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        out = flash_attention(qp, kp, vp, causal=causal, window=window,
+                              scale=scale, block_q=bq, block_k=bk,
+                              interpret=_interpret_default(interpret))
+        return out[:, :, :Sq]
+    # irregular cross-attention shapes: oracle fallback
+    return ref.attention_ref(q, k, v, causal, window, scale)

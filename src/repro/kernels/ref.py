@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: kernel tests sweep shapes/dtypes and
+``assert_allclose`` against these functions.  They are also the fallback
+implementation on backends without Pallas support.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------
+# Semi-join membership: queries ∈ sorted table?
+# ----------------------------------------------------------------------
+
+def semijoin_mask_ref(queries: jax.Array, table_sorted: jax.Array) -> jax.Array:
+    """mask[i] = any(table == queries[i]);  table_sorted ascending.
+    Sentinel entries (INT32_MIN padding) never match real keys."""
+    pos = jnp.searchsorted(table_sorted, queries)
+    pos = jnp.clip(pos, 0, table_sorted.shape[0] - 1)
+    return table_sorted[pos] == queries
+
+
+# ----------------------------------------------------------------------
+# Join count: #table entries equal to each left key (expansion sizes)
+# ----------------------------------------------------------------------
+
+def join_count_ref(left_keys: jax.Array, table_sorted: jax.Array) -> jax.Array:
+    lo = jnp.searchsorted(table_sorted, left_keys, side="left")
+    hi = jnp.searchsorted(table_sorted, left_keys, side="right")
+    return (hi - lo).astype(jnp.int32)
+
+
+# ----------------------------------------------------------------------
+# Flash attention (causal, optional sliding window, GQA)
+# ----------------------------------------------------------------------
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True,
+                  window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jax.Array:
+    """Reference attention.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; Hq % Hkv == 0 (GQA).
+    window: sliding-window size (key j visible to query i iff
+            i - window < j <= i), mixtral-style.
+    Returns [B, Hq, Sq, D] in q.dtype; accumulation in fp32.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    # positions: queries occupy the last Sq slots of the Skv timeline
+    qpos = jnp.arange(Sq) + (Skv - Sq)
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# MoE token dispatch (dense formulation oracle)
+# ----------------------------------------------------------------------
+
+def moe_dispatch_ref(x: jax.Array, gates: jax.Array, topk: int):
+    """Return (combine_weights [T, E], dispatch_mask [T, E]) for top-k
+    routing with softmax-over-selected renormalization."""
+    T, E = gates.shape
+    vals, idx = jax.lax.top_k(gates, topk)
+    w = jax.nn.softmax(vals, axis=-1)
+    combine = jnp.zeros((T, E), gates.dtype)
+    combine = combine.at[jnp.arange(T)[:, None], idx].set(w)
+    return combine, combine > 0

@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes, prove the shardings are coherent, and
+capture the artifacts the roofline analysis reads.
+
+MUST be the process entry point (the XLA_FLAGS line above runs before
+any jax import).  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+      --shape train_4k --mesh both --out reports/dryrun
+
+Per cell it records: per-device memory stats, cost_analysis, the
+trip-count-corrected HLO accounting (flops / HBM traffic / per-type
+collective bytes), and the collective schedule summary.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import numpy as np
+
+
+def _cell_report(arch_id: str, shape_name: str, mesh_name: str,
+                 compiled, lower_s: float, compile_s: float,
+                 world: int) -> dict:
+    from .hlocost import analyze
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    hc = analyze(txt, world=world)
+    return {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "lower_sec": round(lower_s, 2), "compile_sec": round(compile_s, 2),
+        "memory": {
+            "argument_bytes_per_device": ma.argument_size_in_bytes,
+            "output_bytes_per_device": ma.output_size_in_bytes,
+            "temp_bytes_per_device": ma.temp_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        },
+        "xla_cost_analysis": {
+            "flops_body_once": ca.get("flops", 0.0),
+            "bytes_accessed_body_once": ca.get("bytes accessed", 0.0),
+        },
+        "hlo_accounting": {
+            "flops_per_device": hc.flops,
+            "transcendentals_per_device": hc.transcendentals,
+            "hbm_traffic_bytes_per_device": hc.traffic_bytes,
+            "collective_bytes": hc.collective_bytes,
+            "collective_counts": hc.collective_counts,
+        },
+    }
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: Path, overrides: dict | None = None,
+             profile: str = "baseline") -> dict:
+    import jax
+    from ..configs import get_arch
+    from .mesh import make_production_mesh
+    from .steps import make_forward_step, make_serve_step, make_train_step
+
+    spec = get_arch(arch_id)
+    sh = spec.shape(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if sh.skip:
+        return {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                "skipped": True, "reason": sh.skip_reason}
+
+    cfg = spec.optimized_config() if profile == "optimized" else spec.config
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    world = int(np.prod(mesh.devices.shape))
+
+    t0 = time.perf_counter()
+    if sh.kind == "train":
+        bundle = make_train_step(cfg, mesh, batch=sh.global_batch,
+                                 seq=sh.seq_len)
+        args = (bundle.input_shapes["params"], bundle.input_shapes["opt_state"],
+                bundle.input_shapes["inputs"], bundle.input_shapes["targets"])
+    elif sh.kind == "prefill":
+        bundle = make_forward_step(cfg, mesh, batch=sh.global_batch,
+                                   seq=sh.seq_len)
+        args = (bundle.input_shapes["params"], bundle.input_shapes["inputs"])
+    else:  # decode
+        bundle = make_serve_step(cfg, mesh, batch=sh.global_batch,
+                                 max_len=sh.seq_len)
+        args = (bundle.input_shapes["params"], bundle.input_shapes["token"],
+                bundle.input_shapes["cache"], bundle.input_shapes["pos"])
+
+    with mesh:
+        lowered = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                          out_shardings=bundle.out_shardings).lower(*args)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t2 = time.perf_counter()
+
+    rep = _cell_report(arch_id, shape_name, mesh_name, compiled,
+                       t1 - t0, t2 - t1, world)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fn = out_dir / f"{arch_id}__{shape_name}__{mesh_name}.json"
+    fn.write_text(json.dumps(rep, indent=2))
+    return rep
+
+
+def main() -> int:
+    from ..configs import ARCHS, all_cells
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--profile", default="baseline",
+                    choices=["baseline", "optimized"],
+                    help="optimized = per-arch §Perf production flags")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (perf experiments)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    cells = all_cells(include_skipped=True)
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    out_dir = Path(args.out)
+    failures = 0
+    for arch_id, shape_name in cells:
+        for mp in meshes:
+            tag = f"{arch_id:24s} {shape_name:12s} {'2x16x16' if mp else '16x16':8s}"
+            try:
+                rep = run_cell(arch_id, shape_name, mp, out_dir,
+                               overrides or None, profile=args.profile)
+                if rep.get("skipped"):
+                    print(f"SKIP {tag} ({rep['reason'][:60]})")
+                    continue
+                hc = rep["hlo_accounting"]
+                mem = rep["memory"]
+                per_dev_gb = (mem["argument_bytes_per_device"]
+                              + mem["temp_bytes_per_device"]) / 1e9
+                coll_gb = sum(hc["collective_bytes"].values()) / 1e9
+                print(f"OK   {tag} compile={rep['compile_sec']:6.1f}s "
+                      f"flops/dev={hc['flops_per_device']:.3e} "
+                      f"mem/dev={per_dev_gb:6.2f}GB coll={coll_gb:8.3f}GB")
+            except Exception as e:  # noqa: BLE001 -- report and continue
+                failures += 1
+                print(f"FAIL {tag} {type(e).__name__}: {e}")
+                traceback.print_exc(limit=3)
+    print(f"\n{'ALL CELLS PASS' if failures == 0 else f'{failures} FAILURES'}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

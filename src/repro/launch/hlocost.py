@@ -1,0 +1,423 @@
+"""HLO cost accounting with loop-trip multiplication.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE (verified:
+a scan over L layers reports 1/L of the real FLOPs), which would wreck
+the roofline for scan-over-layers models.  This module parses the
+compiled HLO text (post-SPMD partitioning, so per-device costs and the
+actual inserted collectives) and computes:
+
+  * flops          -- dot/elementwise/reduce, x known_trip_count of every
+                      enclosing while loop (nested loops multiply);
+  * traffic_bytes  -- HBM model: every fusion-boundary op reads operands
+                      and writes outputs (aliasing ops excluded);
+  * collectives    -- per-type bytes and counts (all-gather, all-reduce,
+                      reduce-scatter, all-to-all, collective-permute),
+                      again trip-multiplied.
+
+This is the profile the §Perf loop reads; there is no wall-clock on a
+CPU-only host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "clamp",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "sign",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "atan2",
+}
+_TRANSCENDENTAL = {"exponential", "exp", "tanh", "log", "logistic", "rsqrt",
+                   "sqrt", "power", "sine", "cosine", "expm1", "log1p",
+                   "cbrt", "erf", "tan"}
+_FREE = {"get-tuple-element", "tuple", "bitcast", "parameter", "constant",
+         "copy", "copy-start", "copy-done", "after-all", "partition-id",
+         "replica-id", "iota", "reshape", "broadcast", "transpose",
+         "get-dimension-size", "opt-barrier"}
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-gather-start", "all-reduce-start",
+                "collective-permute-start", "ragged-all-to-all"}
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def add(self, other: "HloCost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        self.traffic_bytes += other.traffic_bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = self.collective_counts.get(k, 0.0) + v * mult
+
+
+# ----------------------------------------------------------------------
+# Shape parsing
+# ----------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+
+
+def _shape_list(typestr: str) -> List[Tuple[str, List[int]]]:
+    """All (dtype, dims) shapes in a type string (handles tuples)."""
+    out = []
+    for m in _SHAPE_RE.finditer(typestr):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(x) for x in dims.split(",") if x] if dims else []))
+    return out
+
+
+def _nbytes(typestr: str) -> float:
+    total = 0.0
+    for dt, dims in _shape_list(typestr):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _nelems(typestr: str) -> float:
+    total = 0.0
+    for _, dims in _shape_list(typestr):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+# ----------------------------------------------------------------------
+# HLO text parsing
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    opcode: str
+    result_type: str
+    operands: List[str]
+    attrs: str
+
+
+# result type may be a tuple containing /*index=N*/ comments (which have
+# '=' in them) -- match lazily up to " opcode(".
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)"
+    r"\((.*?)\)(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+
+
+def _split_computations(text: str) -> Dict[str, List[_Op]]:
+    comps: Dict[str, List[_Op]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rtype, opcode, args, attrs = m.groups()
+        operands = re.findall(r"%([\w\.\-]+)", args)
+        comps[cur].append(_Op(name, opcode, rtype, operands, attrs))
+    return comps
+
+
+def _group_size(attrs: str, world: int) -> int:
+    """Participants per replica group of a collective (for ring factors)."""
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", attrs)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:  # iota format [num_groups, group_size]
+        return int(m.group(2))
+    return world
+
+
+def _trip_count(attrs: str) -> float:
+    m = re.search(r'known_trip_count[="\{:]+n["\s:]*"?(\d+)', attrs)
+    return float(m.group(1)) if m else 1.0
+
+
+class HloCostModel:
+    def __init__(self, text: str, world: int = 1):
+        self.comps = _split_computations(text)
+        self.defs: Dict[str, Dict[str, str]] = {
+            c: {op.name: op.result_type for op in ops}
+            for c, ops in self.comps.items()}
+        self.world = world
+        self._memo: Dict[Tuple[str, bool], HloCost] = {}
+        # entry = the computation named like ENTRY (heuristic: the one not
+        # called by anyone)
+        called = set()
+        for ops in self.comps.values():
+            for op in ops:
+                for m in re.finditer(r"(?:calls|to_apply|body|condition)="
+                                     r"%?([\w\.\-]+)", op.attrs):
+                    called.add(m.group(1))
+                for m in re.finditer(r"branch_computations=\{([^}]*)\}",
+                                     op.attrs):
+                    for b in re.findall(r"%?([\w\.\-]+)", m.group(1)):
+                        called.add(b)
+        roots = [c for c in self.comps if c not in called]
+        self.entry = roots[-1] if roots else next(iter(self.comps))
+
+    # ------------------------------------------------------------------
+    def cost(self) -> HloCost:
+        return self._comp_cost(self.entry, fused=False)
+
+    def _comp_cost(self, comp: str, fused: bool) -> HloCost:
+        key = (comp, fused)
+        if key in self._memo:
+            return self._memo[key]
+        total = HloCost()
+        if comp not in self.comps:
+            self._memo[key] = total
+            return total
+        defs = self.defs[comp]
+        for op in self.comps[comp]:
+            total.add(self._op_cost(op, comp, defs, fused))
+        self._memo[key] = total
+        return total
+
+    def _op_cost(self, op: _Op, comp: str, defs: Dict[str, str],
+                 fused: bool) -> HloCost:
+        c = HloCost()
+        oc = op.opcode
+        # ---- control flow ----
+        if oc == "while":
+            trips = _trip_count(op.attrs)
+            body = re.search(r"body=%?([\w\.\-]+)", op.attrs)
+            cond = re.search(r"condition=%?([\w\.\-]+)", op.attrs)
+            if body:
+                c.add(self._comp_cost(body.group(1), fused=False), trips)
+            if cond:
+                c.add(self._comp_cost(cond.group(1), fused=False), trips)
+            return c
+        if oc == "conditional":
+            m = re.search(r"branch_computations=\{([^}]*)\}", op.attrs)
+            if m:
+                branches = re.findall(r"%?([\w\.\-]+)", m.group(1))
+                costs = [self._comp_cost(b, fused=False) for b in branches]
+                if costs:
+                    # one branch executes; take the max-flops branch
+                    c.add(max(costs, key=lambda x: x.flops))
+            return c
+        if oc in ("fusion", "call", "async-start"):
+            m = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", op.attrs)
+            if m:
+                c.add(self._comp_cost(m.group(1), fused=True))
+            if not fused and oc in ("fusion", "call"):
+                c.traffic_bytes += _nbytes(op.result_type)
+                if m:
+                    c.traffic_bytes += self._fusion_input_bytes(m.group(1))
+                else:
+                    c.traffic_bytes += sum(_nbytes(defs.get(o, ""))
+                                           for o in op.operands)
+            return c
+
+        # ---- collectives ----
+        if oc in _COLLECTIVES:
+            base = oc.replace("-start", "")
+            g = _group_size(op.attrs, self.world)
+            ring = (g - 1) / max(g, 1)
+            if base == "all-reduce":
+                bytes_ = _nbytes(op.result_type) * 2 * ring
+            elif base == "all-gather":
+                bytes_ = _nbytes(op.result_type) * ring
+            elif base == "reduce-scatter":
+                in_bytes = sum(_nbytes(defs.get(o, "")) for o in op.operands)
+                bytes_ = in_bytes * ring
+            elif base in ("all-to-all", "ragged-all-to-all"):
+                in_bytes = sum(_nbytes(defs.get(o, "")) for o in op.operands)
+                bytes_ = in_bytes * ring
+            else:  # collective-permute
+                bytes_ = _nbytes(op.result_type)
+            c.collective_bytes[base] = c.collective_bytes.get(base, 0) + bytes_
+            c.collective_counts[base] = c.collective_counts.get(base, 0) + 1
+            if not fused:
+                c.traffic_bytes += self._io_bytes(op, defs)
+            return c
+
+        # ---- compute ----
+        if oc == "dot":
+            out_elems = _nelems(op.result_type)
+            k = 1.0
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+            if m and op.operands:
+                lhs_type = defs.get(op.operands[0], "")
+                shapes = _shape_list(lhs_type)
+                if shapes:
+                    dims = shapes[0][1]
+                    for d in (int(x) for x in m.group(1).split(",") if x):
+                        if d < len(dims):
+                            k *= dims[d]
+            c.flops += 2.0 * out_elems * k
+        elif oc == "convolution":
+            out_elems = _nelems(op.result_type)
+            if len(op.operands) >= 2:
+                rhs = _shape_list(defs.get(op.operands[1], ""))
+                kernel = 1.0
+                if rhs:
+                    dims = rhs[0][1]
+                    # kernel = all dims except output-feature dim (approx)
+                    if dims:
+                        kernel = 1.0
+                        for d in dims:
+                            kernel *= d
+                        kernel /= max(dims[-1], 1)
+                c.flops += 2.0 * out_elems * kernel
+        elif oc in _ELEMENTWISE or oc == "convert":
+            c.flops += _nelems(op.result_type)
+        elif oc in _TRANSCENDENTAL:
+            n = _nelems(op.result_type)
+            c.flops += n
+            c.transcendentals += n
+        elif oc in ("reduce", "reduce-window"):
+            c.flops += sum(_nelems(defs.get(o, "")) for o in op.operands[:1])
+        elif oc in ("scatter", "gather", "dynamic-slice",
+                    "dynamic-update-slice", "pad", "concatenate", "slice",
+                    "reverse", "sort", "select-and-scatter", "rng",
+                    "rng-bit-generator", "cholesky", "triangular-solve",
+                    "domain", "custom-call", "partition-id"):
+            pass  # data movement / special -- traffic handled below
+        # ---- HBM traffic at fusion boundaries ----
+        if not fused and oc not in _FREE:
+            c.traffic_bytes += self._io_bytes(op, defs)
+        return c
+
+    def _io_bytes(self, op: _Op, defs: Dict[str, str]) -> float:
+        """HBM traffic of one fusion-boundary op.
+
+        Slicing ops touch only the slice, not the whole operand -- a
+        dynamic-slice in a scan body reads one layer's weights per
+        iteration, not the full stacked tensor (counting the operand
+        would overcount by num_layers).
+        """
+        out = _nbytes(op.result_type)
+        oc = op.opcode
+        if oc in ("dynamic-slice", "slice", "gather"):
+            return 2.0 * out                      # read slice + write out
+        if oc == "dynamic-update-slice":
+            upd = (_nbytes(defs.get(op.operands[1], ""))
+                   if len(op.operands) > 1 else out)
+            return 2.0 * upd                      # read + write the window
+        if oc == "scatter":
+            upd = (_nbytes(defs.get(op.operands[-1], ""))
+                   if op.operands else out)
+            return 2.0 * upd + out * 0.0
+        if oc in ("pad", "concatenate", "reverse"):
+            return 2.0 * out
+        ins = sum(_nbytes(defs.get(o, "")) for o in op.operands)
+        return out + ins
+
+    def _fusion_input_bytes(self, comp: str) -> float:
+        """Input traffic of a fused computation: parameters consumed only
+        through slicing ops count at slice-output size."""
+        if comp not in self.comps:
+            return 0.0
+        key = ("__fin__", comp)
+        if key in self._memo:
+            return self._memo[key]        # type: ignore[return-value]
+        ops = self.comps[comp]
+        slicing = {"dynamic-slice", "slice", "gather", "bitcast", "reshape",
+                   "broadcast", "transpose", "convert"}
+        consumers: Dict[str, List[_Op]] = {}
+        params: List[_Op] = []
+        for op in ops:
+            if op.opcode == "parameter":
+                params.append(op)
+            for o in op.operands:
+                consumers.setdefault(o, []).append(op)
+        total = 0.0
+        for p in params:
+            cons = consumers.get(p.name, [])
+            direct_slices = [cop for cop in cons
+                             if cop.opcode in ("dynamic-slice", "slice",
+                                               "gather")]
+            if cons and len(direct_slices) == len(cons):
+                total += sum(_nbytes(cop.result_type)
+                             for cop in direct_slices)
+            else:
+                total += _nbytes(p.result_type)
+        self._memo[key] = total            # type: ignore[assignment]
+        return total
+
+
+def analyze(text: str, world: int = 1) -> HloCost:
+    return HloCostModel(text, world).cost()
+
+
+def top_collectives(text: str, world: int = 1, k: int = 12):
+    """Per-op collective hotspots: (opcode, result shape, per-call bytes,
+    trip multiplier, total bytes).  The §Perf loop reads this to find
+    WHICH collective dominates."""
+    model = HloCostModel(text, world)
+    # compute trip multiplier per computation via a reachability walk
+    mult: Dict[str, float] = {model.entry: 1.0}
+    order = [model.entry]
+    seen = {model.entry}
+    while order:
+        comp = order.pop(0)
+        m = mult[comp]
+        for op in model.comps.get(comp, []):
+            trips = _trip_count(op.attrs) if op.opcode == "while" else 1.0
+            for attr in ("calls", "to_apply", "body", "condition"):
+                mm = re.search(rf"{attr}=%?([\w\.\-]+)", op.attrs)
+                if mm:
+                    child = mm.group(1)
+                    mult[child] = mult.get(child, 0.0) + m * trips
+                    if child not in seen:
+                        seen.add(child)
+                        order.append(child)
+    rows = []
+    for comp, ops in model.comps.items():
+        m = mult.get(comp, 0.0)
+        if m <= 0:
+            continue
+        for op in ops:
+            if op.opcode not in _COLLECTIVES:
+                continue
+            base = op.opcode.replace("-start", "")
+            g = _group_size(op.attrs, world)
+            ring = (g - 1) / max(g, 1)
+            if base == "all-reduce":
+                bytes_ = _nbytes(op.result_type) * 2 * ring
+            elif base == "all-gather":
+                bytes_ = _nbytes(op.result_type) * ring
+            else:
+                bytes_ = sum(_nbytes(model.defs[comp].get(o, ""))
+                             for o in op.operands) * ring
+            rows.append((base, op.result_type.split("{")[0][:60], bytes_,
+                         m, bytes_ * m))
+    rows.sort(key=lambda r: -r[-1])
+    return rows[:k]

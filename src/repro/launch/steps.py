@@ -1,0 +1,183 @@
+"""train_step / serve_step factories with mesh-aware shardings.
+
+These are the functions the multi-pod dry-run lowers and the live
+train/serve drivers execute.  All sharding comes from the logical-axis
+rules engine (models/common.py); nothing here hard-codes a mesh shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import (ModelConfig, get_api, make_rules, param_pspecs,
+                      param_shapes, spec_for)
+from ..models.common import activation_sharding, is_def
+from ..optim import (AdamWConfig, CompressionConfig, adamw_init,
+                     adamw_update, compress_gradients, cosine_schedule)
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """A jit-able step + its in/out shardings + input shape-structs."""
+    fn: Callable
+    in_shardings: Any
+    out_shardings: Any
+    input_shapes: Dict[str, Any]
+
+
+def _rules_for(cfg: ModelConfig, decode: bool):
+    return make_rules(fsdp=cfg.fsdp,
+                      seq_model_shard=decode and cfg.seq_shard_decode)
+
+
+def _shard(mesh: Mesh, spec) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _tree_shardings(mesh: Mesh, defs, rules):
+    return jax.tree.map(
+        lambda d: _shard(mesh, spec_for(d.shape, d.axes, mesh, rules)),
+        defs, is_leaf=is_def)
+
+
+def _axes_to_shardings(mesh: Mesh, shapes, axes_tree, rules):
+    """Shardings for a (shape-struct tree, logical-axes tree) pair."""
+    def one(s, ax):
+        if ax is None:
+            return _shard(mesh, P())
+        return _shard(mesh, spec_for(s.shape, ax, mesh, rules))
+    # axes_tree leaves are tuples; match structure manually
+    flat_s, tdef = jax.tree.flatten(shapes)
+    flat_a = tdef.flatten_up_to(axes_tree)
+    return jax.tree.unflatten(tdef, [one(s, a) for s, a in zip(flat_s, flat_a)])
+
+
+# ----------------------------------------------------------------------
+# Train
+# ----------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh,
+                    opt: Optional[AdamWConfig] = None,
+                    compression: Optional[CompressionConfig] = None,
+                    batch: int = 8, seq: int = 128,
+                    total_steps: int = 10000) -> StepBundle:
+    api = get_api(cfg)
+    defs = api.defs(cfg)
+    opt = opt or AdamWConfig()
+    compression = compression or CompressionConfig()
+    rules = _rules_for(cfg, decode=False)
+    lr_fn = cosine_schedule(opt.lr, warmup=min(1000, total_steps // 10),
+                            total=total_steps)
+
+    def train_step(params, opt_state, inputs, targets):
+        def loss_fn(p):
+            return api.loss(cfg, p, inputs, targets)
+        with activation_sharding(mesh, rules):
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads, _ = compress_gradients(grads, None, compression)
+        lr = lr_fn(opt_state["step"])
+        new_params, new_state, gnorm = adamw_update(params, grads, opt_state,
+                                                    opt, lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_params, new_state, metrics
+
+    p_shapes = param_shapes(defs)
+    p_shard = _tree_shardings(mesh, defs, rules)
+    o_shapes = {
+        "m": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape,
+                                                         opt.state_dtype),
+                          p_shapes),
+        "v": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape,
+                                                         opt.state_dtype),
+                          p_shapes),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    o_shard = {"m": p_shard, "v": p_shard, "step": _shard(mesh, P())}
+    data_spec = spec_for((batch, seq), ("batch", None), mesh, rules)
+    if cfg.embed_inputs:
+        in_spec = spec_for((batch, seq, cfg.d_model), ("batch", None, None),
+                           mesh, rules)
+        in_shape = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), cfg.dtype)
+    else:
+        in_spec = data_spec
+        in_shape = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    tgt_shape = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+    in_shardings = (p_shard, o_shard, _shard(mesh, in_spec),
+                    _shard(mesh, data_spec))
+    out_shardings = (p_shard, o_shard,
+                     {"loss": _shard(mesh, P()), "grad_norm": _shard(mesh, P()),
+                      "lr": _shard(mesh, P())})
+    return StepBundle(train_step, in_shardings, out_shardings,
+                      {"params": p_shapes, "opt_state": o_shapes,
+                       "inputs": in_shape, "targets": tgt_shape})
+
+
+# ----------------------------------------------------------------------
+# Prefill / forward (throughput shape)
+# ----------------------------------------------------------------------
+
+def make_forward_step(cfg: ModelConfig, mesh: Mesh, batch: int,
+                      seq: int) -> StepBundle:
+    api = get_api(cfg)
+    defs = api.defs(cfg)
+    rules = _rules_for(cfg, decode=False)
+
+    def forward(params, inputs):
+        with activation_sharding(mesh, rules):
+            logits, _ = api.apply(cfg, params, inputs)
+        return logits
+
+    p_shard = _tree_shardings(mesh, defs, rules)
+    if cfg.embed_inputs:
+        in_spec = spec_for((batch, seq, cfg.d_model), ("batch", None, None),
+                           mesh, rules)
+        in_shape = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), cfg.dtype)
+    else:
+        in_spec = spec_for((batch, seq), ("batch", None), mesh, rules)
+        in_shape = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    logits_spec = spec_for((batch, seq, cfg.vocab_size),
+                           ("batch", None, "vocab"), mesh, rules)
+    return StepBundle(forward, (p_shard, _shard(mesh, in_spec)),
+                      _shard(mesh, logits_spec),
+                      {"params": param_shapes(defs), "inputs": in_shape})
+
+
+# ----------------------------------------------------------------------
+# Decode (serve_step)
+# ----------------------------------------------------------------------
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, batch: int,
+                    max_len: int) -> StepBundle:
+    api = get_api(cfg)
+    defs = api.defs(cfg)
+    rules = _rules_for(cfg, decode=True)
+
+    def serve_step(params, token, cache, pos):
+        with activation_sharding(mesh, rules):
+            logits, new_cache = api.decode(cfg, params, token, cache, pos)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, new_cache
+
+    p_shard = _tree_shardings(mesh, defs, rules)
+    cache_shapes = api.init_cache(cfg, batch, max_len, as_shape=True)
+    cache_shard = _axes_to_shardings(mesh, cache_shapes, api.cache_axes(cfg),
+                                     rules)
+    if cfg.embed_inputs:
+        tok_shape = jax.ShapeDtypeStruct((batch, cfg.d_model), cfg.dtype)
+        tok_spec = spec_for((batch, cfg.d_model), ("batch", None), mesh, rules)
+    else:
+        tok_shape = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        tok_spec = spec_for((batch,), ("batch",), mesh, rules)
+    in_shardings = (p_shard, _shard(mesh, tok_spec), cache_shard,
+                    _shard(mesh, P()))
+    out_tok_spec = spec_for((batch,), ("batch",), mesh, rules)
+    out_shardings = (_shard(mesh, out_tok_spec), cache_shard)
+    return StepBundle(serve_step, in_shardings, out_shardings,
+                      {"params": param_shapes(defs), "token": tok_shape,
+                       "cache": cache_shapes,
+                       "pos": jax.ShapeDtypeStruct((), jnp.int32)})

@@ -1,0 +1,9 @@
+"""LM model stack: the 10 assigned architectures as pure-JAX modules."""
+from .common import (ModelConfig, ParamDef, init_params, make_rules,
+                     param_count, param_pspecs, param_shapes,
+                     param_shardings, spec_for)
+from .registry import ModelApi, get_api
+
+__all__ = ["ModelConfig", "ParamDef", "init_params", "make_rules",
+           "param_count", "param_pspecs", "param_shapes", "param_shardings",
+           "spec_for", "ModelApi", "get_api"]

@@ -1,0 +1,313 @@
+"""Model-stack foundations: config, parameter definitions with logical
+sharding axes, the logical-axis -> PartitionSpec rules engine, and shared
+layers (RMSNorm, RoPE, embeddings).
+
+Parameters are declared once as ``ParamDef`` trees; from the same tree we
+derive (a) initialized arrays, (b) ``jax.ShapeDtypeStruct`` stand-ins for
+the no-allocation dry-run, and (c) ``PartitionSpec`` trees via the rules
+engine with divisibility fallback (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ======================================================================
+# Config
+# ======================================================================
+
+@dataclasses.dataclass
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"          # dense | moe | rwkv | hybrid
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 2
+    num_kv_heads: int = 2
+    head_dim: int = 64
+    d_ff: int = 256
+    vocab_size: int = 256
+    # attention options
+    qk_norm: bool = False          # qwen3
+    qkv_bias: bool = False         # qwen2.5 / qwen2-moe
+    window: Optional[int] = None   # mixtral SWA
+    rope_theta: float = 1e4
+    # mlp options
+    mlp_act: str = "silu_glu"      # silu_glu | sq_relu
+    # MoE options
+    num_experts: int = 0
+    top_k: int = 2
+    num_shared_experts: int = 0
+    moe_d_ff: Optional[int] = None  # per-expert ff (qwen2-moe: 1408)
+    capacity_factor: float = 1.25
+    expert_affinity_placement: bool = False   # paper bridge (Def. 13 + Alg 2)
+    moe_grouped_dispatch: bool = False        # per-sequence routing (§Perf):
+    # the flat global dispatch argsorts ALL tokens -> XLA must gather the
+    # full token array across the data axis; grouped dispatch routes each
+    # sequence independently (per-row capacity), so batch sharding
+    # propagates through the whole MoE block.
+    moe_sharded_ffn: bool = False             # §Perf: explicit sharding
+    # constraints + bf16 casts on the dispatch/expert buffers, steering
+    # XLA away from gathering activations / all-reducing f32 pre-combine
+    # buffers across the model axis.
+    moe_shard_map: bool = False               # §Perf: manual-collective MoE
+    # (Megatron pattern): expert FFN + combine run per model shard under
+    # shard_map; the ONLY model-axis collective is one bf16 psum of the
+    # combined [B,S,D] output (the jit path reduces the capacity-inflated
+    # f32 dispatch buffer instead).  Requires non-FSDP expert weights.
+    # rwkv / ssm options
+    ssm_d_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_scan_unroll: int = 1   # §Perf: K sequential state updates fused
+    # per while-iteration -- the [B, d_in, N] fp32 carry is read/written
+    # once per K steps instead of every step (K x less HBM streaming).
+    rwkv_head_dim: int = 64
+    chunk_size: int = 128
+    # hybrid (jamba) options
+    attn_every: int = 8            # 1 attention layer per this many
+    moe_every: int = 2             # MoE FFN on every other layer
+    # io
+    embed_inputs: bool = False     # modality-frontend stub ([B,S,D] in)
+    tie_embeddings: bool = False
+    logit_softcap: Optional[float] = None
+    # numerics / perf
+    dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-5
+    remat: str = "none"            # none | full | dots
+    use_flash_kernel: bool = False # Pallas path (False for dry-run lowering)
+    # sequence-parallel / fsdp toggles consumed by the rules engine
+    fsdp: bool = False
+    seq_shard_decode: bool = False  # shard long KV caches along seq
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def effective_moe_ff(self) -> int:
+        return self.moe_d_ff if self.moe_d_ff is not None else self.d_ff
+
+
+# ======================================================================
+# ParamDef trees
+# ======================================================================
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]     # logical axis per dim (None = replicated)
+    init: str = "normal"                # normal | zeros | ones
+    scale: float = 1.0                  # stddev multiplier for normal
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs: Any, key: jax.Array) -> Any:
+    """Materialize arrays from a ParamDef tree."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, d.dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, d.dtype))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            std = d.scale / math.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, d.shape, jnp.float32) * std
+                        ).astype(d.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_shapes(defs: Any) -> Any:
+    """ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_def)
+
+
+def param_count(defs: Any) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return sum(int(np.prod(d.shape)) for d in leaves)
+
+
+# ======================================================================
+# Logical-axis -> PartitionSpec rules engine
+# ======================================================================
+# A rule maps a logical axis name to a priority list of mesh-axis tuples;
+# the first candidate whose total size divides the dimension (and whose
+# mesh axes are still unused in this spec) wins.  Unknown axes or no fit
+# -> replicated (None).
+
+Rules = Dict[str, Sequence[Tuple[str, ...]]]
+
+# TP on "model"; DP on ("pod","data"); FSDP shards the embed/ff dims of
+# params over "data" too (and "pod" when present).
+def make_rules(fsdp: bool = False, seq_model_shard: bool = False,
+               expert_axis: Optional[str] = None) -> Rules:
+    fsdp_c = [("data",), ("pod",)] if fsdp else []
+    rules: Dict[str, List[Tuple[str, ...]]] = {
+        "batch":   [("pod", "data"), ("data",)],
+        "seq":     [("model",)] if seq_model_shard else [],
+        "vocab":   [("model",)],
+        "embed":   list(fsdp_c),
+        "heads":   [("model",)],
+        "kv_heads": [("model",)],
+        "mlp":     [("model",)],
+        "experts": [(expert_axis,)] if expert_axis else [],
+        "expert_mlp": [("model",)],
+        "layers":  [],
+        "conv":    [],
+        "state":   [],
+        "cache_seq": [("model",)] if seq_model_shard else [],
+    }
+    return rules
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+             mesh: Mesh, rules: Rules) -> P:
+    used: set = set()
+    parts: List[Any] = []
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, ax in zip(shape, axes):
+        chosen = None
+        for cand in rules.get(ax, []) if ax else []:
+            if any(c in used or c not in sizes for c in cand):
+                continue
+            total = int(np.prod([sizes[c] for c in cand]))
+            if total > 1 and dim % total == 0:
+                chosen = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+                break
+        parts.append(chosen)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_pspecs(defs: Any, mesh: Mesh, rules: Rules) -> Any:
+    return jax.tree.map(lambda d: spec_for(d.shape, d.axes, mesh, rules),
+                        defs, is_leaf=is_def)
+
+
+def param_shardings(defs: Any, mesh: Mesh, rules: Rules) -> Any:
+    return jax.tree.map(
+        lambda d: NamedSharding(mesh, spec_for(d.shape, d.axes, mesh, rules)),
+        defs, is_leaf=is_def)
+
+
+# ======================================================================
+# Shared layers
+# ======================================================================
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [S] or [B, S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [.., S, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if ang.ndim == 2:                                  # [S, D/2] -> [1,S,1,D/2]
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:                                              # [B,S,D/2]->[B,S,1,D/2]
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(logits: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return logits
+    return jnp.tanh(logits / cap) * cap
+
+
+# ======================================================================
+# Activation sharding constraints (MaxText-style logical annotations)
+# ======================================================================
+# The step factories (launch/steps.py) install the (mesh, rules) pair for
+# the duration of tracing; model code calls ``constrain(x, axes)`` at the
+# points where XLA's sharding propagation is known to go wrong (MoE
+# dispatch buffers, §Perf).  Outside any context it is a no-op, so model
+# code stays mesh-agnostic.
+import contextlib as _contextlib
+
+_ACT_CTX: List[Tuple[Any, Rules]] = []
+
+
+@_contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: Rules):
+    _ACT_CTX.append((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACT_CTX.pop()
+
+
+def constrain(x: jax.Array, axes: Tuple[Optional[str], ...]) -> jax.Array:
+    if not _ACT_CTX or _ACT_CTX[-1][0] is None:
+        return x
+    mesh, rules = _ACT_CTX[-1]
+    spec = spec_for(x.shape, axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def current_sharding_ctx() -> Optional[Tuple[Mesh, Rules]]:
+    if not _ACT_CTX or _ACT_CTX[-1][0] is None:
+        return None
+    return _ACT_CTX[-1]
+
+
+@_contextlib.contextmanager
+def no_constraints():
+    """Silence constraints (inside shard_map everything is local)."""
+    _ACT_CTX.append((None, {}))
+    try:
+        yield
+    finally:
+        _ACT_CTX.pop()
+
+
+# remat policies
+def remat_policy(name: str):
+    if name == "none":
+        return None
+    if name == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "dots":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    raise ValueError(name)
+
+
+def maybe_remat(fn: Callable, name: str) -> Callable:
+    if name == "none":
+        return fn
+    return jax.checkpoint(fn, policy=remat_policy(name))

@@ -1,0 +1,198 @@
+"""Jamba-1.5-style hybrid (arXiv:2403.19887): Mamba + attention at a 1:7
+ratio, MoE FFN on every other layer.
+
+Structure per 8-layer super-block (attn_every = 8, moe_every = 2):
+  [0]   attention + dense FFN
+  [1-7] mamba layers; FFN alternates MoE / dense (4 MoE + 3+1 split)
+We realize the per-block layers as: 1 unrolled (attn+dense) +
+inner-scan over 4 (mamba+MoE) + inner-scan over 3 (mamba+dense); the
+outer scan runs over num_layers/8 super-blocks.  Counts match the real
+interleave exactly (9 attn, 63 mamba, 36 MoE, 36 dense for 72L); the
+within-block ordering is regrouped for scan homogeneity (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamDef, maybe_remat, rms_norm, softcap
+from .layers import (attn_apply, attn_decode, attn_defs, kv_cache_axes,
+                     make_kv_cache, mlp_apply, mlp_defs, moe_apply, moe_defs)
+from .lm import stack_defs
+from .ssm import mamba_apply, mamba_defs, mamba_state
+
+
+def _n_blocks(cfg: ModelConfig) -> int:
+    assert cfg.num_layers % cfg.attn_every == 0
+    return cfg.num_layers // cfg.attn_every
+
+
+def _moe_per_block(cfg: ModelConfig) -> int:
+    return cfg.attn_every // cfg.moe_every  # 4 for 8/2
+
+
+def jamba_block_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    D = cfg.d_model
+    n_moe = _moe_per_block(cfg)                 # mamba+moe sublayers
+    n_dense = cfg.attn_every - 1 - n_moe        # mamba+dense sublayers
+    sub_moe = {
+        "ln1": ParamDef((D,), ("embed",), init="ones", dtype=jnp.float32),
+        "ln2": ParamDef((D,), ("embed",), init="ones", dtype=jnp.float32),
+        "mamba": mamba_defs(cfg),
+        "moe": moe_defs(cfg),
+    }
+    sub_dense = {
+        "ln1": ParamDef((D,), ("embed",), init="ones", dtype=jnp.float32),
+        "ln2": ParamDef((D,), ("embed",), init="ones", dtype=jnp.float32),
+        "mamba": mamba_defs(cfg),
+        "mlp": mlp_defs(cfg),
+    }
+    return {
+        "attn_ln1": ParamDef((D,), ("embed",), init="ones", dtype=jnp.float32),
+        "attn_ln2": ParamDef((D,), ("embed",), init="ones", dtype=jnp.float32),
+        "attn": attn_defs(cfg),
+        "attn_mlp": mlp_defs(cfg),
+        "moe_layers": stack_defs(sub_moe, n_moe),
+        "dense_layers": stack_defs(sub_dense, n_dense),
+    }
+
+
+def jamba_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    D, V = cfg.d_model, cfg.vocab_size
+    return {
+        "embed": ParamDef((V, D), ("vocab", "embed"), dtype=cfg.dtype),
+        "blocks": stack_defs(jamba_block_defs(cfg), _n_blocks(cfg)),
+        "final_norm": ParamDef((D,), ("embed",), init="ones",
+                               dtype=jnp.float32),
+        "head": ParamDef((D, V), ("embed", "vocab"), dtype=cfg.dtype),
+    }
+
+
+# ----------------------------------------------------------------------
+# Forward
+# ----------------------------------------------------------------------
+
+def _block_apply(cfg: ModelConfig, pb, x: jax.Array, positions: jax.Array):
+    # attention sub-layer + dense FFN
+    h = attn_apply(cfg, pb["attn"], rms_norm(x, pb["attn_ln1"], cfg.norm_eps),
+                   positions)
+    x = x + h
+    x = x + mlp_apply(cfg, pb["attn_mlp"],
+                      rms_norm(x, pb["attn_ln2"], cfg.norm_eps))
+
+    def moe_sub(xx, pl):
+        h, _ = mamba_apply(cfg, pl["mamba"],
+                           rms_norm(xx, pl["ln1"], cfg.norm_eps))
+        xx = xx + h
+        h, aux = moe_apply(cfg, pl["moe"], rms_norm(xx, pl["ln2"],
+                                                    cfg.norm_eps))
+        return xx + h, aux
+
+    def dense_sub(xx, pl):
+        h, _ = mamba_apply(cfg, pl["mamba"],
+                           rms_norm(xx, pl["ln1"], cfg.norm_eps))
+        xx = xx + h
+        h = mlp_apply(cfg, pl["mlp"], rms_norm(xx, pl["ln2"], cfg.norm_eps))
+        return xx + h, jnp.zeros((), jnp.float32)
+
+    x, auxs = jax.lax.scan(moe_sub, x, pb["moe_layers"])
+    x, _ = jax.lax.scan(dense_sub, x, pb["dense_layers"])
+    return x, auxs.mean()
+
+
+def jamba_apply(cfg: ModelConfig, params, tokens: jax.Array,
+                positions: Optional[jax.Array] = None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    S = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    body = maybe_remat(lambda xx, pb: _block_apply(cfg, pb, xx, positions),
+                       cfg.remat)
+    x, auxs = jax.lax.scan(body, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["head"]
+    return softcap(logits, cfg.logit_softcap), auxs.mean()
+
+
+def jamba_loss(cfg: ModelConfig, params, tokens, targets,
+               aux_weight: float = 0.01):
+    logits, aux = jamba_apply(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean() + aux_weight * aux
+
+
+# ----------------------------------------------------------------------
+# Decode
+# ----------------------------------------------------------------------
+
+def jamba_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     as_shape: bool = False):
+    nb = _n_blocks(cfg)
+    n_moe = _moe_per_block(cfg)
+    n_dense = cfg.attn_every - 1 - n_moe
+    kv = make_kv_cache(cfg, batch, max_len, stacked_layers=nb,
+                       as_shape=as_shape)
+    hm, cm = mamba_state(cfg, batch, as_shape=as_shape, lead=(nb, n_moe))
+    hd, cd = mamba_state(cfg, batch, as_shape=as_shape, lead=(nb, n_dense))
+    return {"kv": kv, "moe_h": hm, "moe_conv": cm,
+            "dense_h": hd, "dense_conv": cd}
+
+
+def jamba_cache_axes(cfg: ModelConfig):
+    kv = kv_cache_axes(cfg, stacked=True)
+    m = ("layers", None, "batch", "mlp", "state")
+    c = ("layers", None, "batch", None, "mlp")
+    return {"kv": kv, "moe_h": m, "moe_conv": c,
+            "dense_h": m, "dense_conv": c}
+
+
+def jamba_decode(cfg: ModelConfig, params, token: jax.Array, cache,
+                 pos: jax.Array):
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+
+    def block_body(xx, scanned):
+        pb, kv_l, hm, cm, hd, cd = scanned
+        h, kv2 = attn_decode(cfg, pb["attn"],
+                             rms_norm(xx, pb["attn_ln1"], cfg.norm_eps),
+                             kv_l, pos)
+        xx = xx + h
+        xx = xx + mlp_apply(cfg, pb["attn_mlp"],
+                            rms_norm(xx, pb["attn_ln2"], cfg.norm_eps))
+
+        def moe_sub(x2, sc):
+            pl, h_s, c_s = sc
+            h, (h2, c2) = mamba_apply(cfg, pl["mamba"],
+                                      rms_norm(x2, pl["ln1"], cfg.norm_eps),
+                                      state=(h_s, c_s))
+            x2 = x2 + h
+            h, _ = moe_apply(cfg, pl["moe"],
+                             rms_norm(x2, pl["ln2"], cfg.norm_eps))
+            return x2 + h, (h2, c2.astype(c_s.dtype))
+
+        def dense_sub(x2, sc):
+            pl, h_s, c_s = sc
+            h, (h2, c2) = mamba_apply(cfg, pl["mamba"],
+                                      rms_norm(x2, pl["ln1"], cfg.norm_eps),
+                                      state=(h_s, c_s))
+            x2 = x2 + h
+            h = mlp_apply(cfg, pl["mlp"],
+                          rms_norm(x2, pl["ln2"], cfg.norm_eps))
+            return x2 + h, (h2, c2.astype(c_s.dtype))
+
+        xx, (hm2, cm2) = jax.lax.scan(moe_sub, xx,
+                                      (pb["moe_layers"], hm, cm))
+        xx, (hd2, cd2) = jax.lax.scan(dense_sub, xx,
+                                      (pb["dense_layers"], hd, cd))
+        return xx, (kv2, hm2, cm2, hd2, cd2)
+
+    x, (kv, hm, cm, hd, cd) = jax.lax.scan(
+        block_body, x, (params["blocks"], cache["kv"], cache["moe_h"],
+                        cache["moe_conv"], cache["dense_h"],
+                        cache["dense_conv"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = softcap(x[:, 0] @ params["head"], cfg.logit_softcap)
+    return logits, {"kv": kv, "moe_h": hm, "moe_conv": cm,
+                    "dense_h": hd, "dense_conv": cd}

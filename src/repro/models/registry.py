@@ -1,0 +1,51 @@
+"""Uniform model API across families (dense/moe transformer, rwkv, jamba).
+
+Every family exposes:
+  defs(cfg)                          -> ParamDef tree
+  apply(cfg, params, inputs)         -> (logits, aux)      [train/prefill]
+  loss(cfg, params, tokens, targets) -> scalar
+  init_cache(cfg, batch, max_len, as_shape) -> decode state tree
+  cache_axes(cfg)                    -> logical axes for the state tree
+  decode(cfg, params, token, cache, pos) -> (logits, new_cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+from . import jamba as _jamba
+from . import lm as _lm
+from . import rwkv as _rwkv
+from .common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    defs: Callable
+    apply: Callable
+    loss: Callable
+    init_cache: Callable
+    cache_axes: Callable
+    decode: Callable
+
+
+_TRANSFORMER = ModelApi(_lm.lm_defs, _lm.lm_apply, _lm.lm_loss,
+                        _lm.lm_init_cache, _lm.lm_cache_axes, _lm.lm_decode)
+
+_REGISTRY: Dict[str, ModelApi] = {
+    "dense": _TRANSFORMER,
+    "moe": _TRANSFORMER,
+    "rwkv": ModelApi(_rwkv.rwkv_defs, _rwkv.rwkv_apply, _rwkv.rwkv_loss,
+                     _rwkv.rwkv_init_cache, _rwkv.rwkv_cache_axes,
+                     _rwkv.rwkv_decode),
+    "hybrid": ModelApi(_jamba.jamba_defs, _jamba.jamba_apply,
+                       _jamba.jamba_loss, _jamba.jamba_init_cache,
+                       _jamba.jamba_cache_axes, _jamba.jamba_decode),
+}
+
+
+def get_api(cfg: ModelConfig) -> ModelApi:
+    if cfg.family not in _REGISTRY:
+        raise KeyError(f"unknown model family {cfg.family!r}; "
+                       f"have {sorted(_REGISTRY)}")
+    return _REGISTRY[cfg.family]

@@ -1,0 +1,286 @@
+"""RWKV6 (Finch, arXiv:2404.05892): attention-free LM with
+data-dependent per-channel decay.
+
+TPU adaptation: the WKV6 recurrence is computed in *chunked* form --
+an intra-chunk scan (sequential in the chunk, parallel over chunks,
+batch and heads) plus an inter-chunk state-propagation scan.  All decay
+factors applied are products of w in (0,1), so the chunked math is
+numerically stable without the divide trick (DESIGN.md §5).
+
+State per layer for decode: WKV state [B, H, N, N] + token-shift
+last-token buffers for time-mix and channel-mix.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamDef, maybe_remat, rms_norm, softcap
+from .lm import stack_defs
+
+
+# ----------------------------------------------------------------------
+# Parameters
+# ----------------------------------------------------------------------
+
+def rwkv_layer_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    D, F = cfg.d_model, cfg.d_ff
+    N = cfg.rwkv_head_dim
+    H = D // N
+    lora = 64
+    return {
+        "ln1": ParamDef((D,), ("embed",), init="ones", dtype=jnp.float32),
+        "ln2": ParamDef((D,), ("embed",), init="ones", dtype=jnp.float32),
+        "tm": {
+            # per-channel lerp coefficients for r,k,v,w,g token-shift mixes
+            "mu_r": ParamDef((D,), ("embed",), init="zeros", dtype=jnp.float32),
+            "mu_k": ParamDef((D,), ("embed",), init="zeros", dtype=jnp.float32),
+            "mu_v": ParamDef((D,), ("embed",), init="zeros", dtype=jnp.float32),
+            "mu_w": ParamDef((D,), ("embed",), init="zeros", dtype=jnp.float32),
+            "mu_g": ParamDef((D,), ("embed",), init="zeros", dtype=jnp.float32),
+            "wr": ParamDef((D, D), ("embed", "heads"), dtype=cfg.dtype),
+            "wk": ParamDef((D, D), ("embed", "heads"), dtype=cfg.dtype),
+            "wv": ParamDef((D, D), ("embed", "heads"), dtype=cfg.dtype),
+            "wg": ParamDef((D, D), ("embed", "heads"), dtype=cfg.dtype),
+            "wo": ParamDef((D, D), ("heads", "embed"), dtype=cfg.dtype),
+            # data-dependent decay: w = exp(-exp(w0 + tanh(xw A) B))
+            "w0": ParamDef((D,), ("embed",), init="zeros", dtype=jnp.float32),
+            "wA": ParamDef((D, lora), ("embed", None), dtype=jnp.float32,
+                           scale=0.1),
+            "wB": ParamDef((lora, D), (None, "embed"), dtype=jnp.float32,
+                           scale=0.1),
+            "u": ParamDef((H, N), ("heads", None), init="zeros",
+                          dtype=jnp.float32),
+            "ln_x": ParamDef((D,), ("embed",), init="ones", dtype=jnp.float32),
+        },
+        "cm": {
+            "mu_k": ParamDef((D,), ("embed",), init="zeros", dtype=jnp.float32),
+            "mu_r": ParamDef((D,), ("embed",), init="zeros", dtype=jnp.float32),
+            "wk": ParamDef((D, F), ("embed", "mlp"), dtype=cfg.dtype),
+            "wv": ParamDef((F, D), ("mlp", "embed"), dtype=cfg.dtype),
+            "wr": ParamDef((D, D), ("embed", "heads"), dtype=cfg.dtype),
+        },
+    }
+
+
+def rwkv_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    D, V = cfg.d_model, cfg.vocab_size
+    return {
+        "embed": ParamDef((V, D), ("vocab", "embed"), dtype=cfg.dtype),
+        "layers": stack_defs(rwkv_layer_defs(cfg), cfg.num_layers),
+        "final_norm": ParamDef((D,), ("embed",), init="ones",
+                               dtype=jnp.float32),
+        "head": ParamDef((D, V), ("embed", "vocab"), dtype=cfg.dtype),
+    }
+
+
+# ----------------------------------------------------------------------
+# WKV6 chunked recurrence
+# ----------------------------------------------------------------------
+
+def wkv_chunked(r, k, v, w, u, chunk: int):
+    """r,k,v,w: [B,T,H,N] (w in (0,1)); u: [H,N].  Returns [B,T,H,N].
+
+    out_t = r_t S_t + (r_t · (u ⊙ k_t)) v_t ;  S_{t+1} = diag(w_t) S_t + k_t ⊗ v_t
+    """
+    B, T, H, N = r.shape
+    C = min(chunk, T)
+    pad = (-T) % C
+    if pad:
+        # zero k/v contribute nothing to the state; w=1 leaves it intact;
+        # padded outputs are sliced off below.
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, zpad)
+        k = jnp.pad(k, zpad)
+        v = jnp.pad(v, zpad)
+        w = jnp.pad(w, zpad, constant_values=1.0)
+    Tp = T + pad
+    nc = Tp // C
+    shp = (B, nc, C, H, N)
+    rc, kc, vc, wc = (a.reshape(shp).astype(jnp.float32) for a in (r, k, v, w))
+
+    # ---- intra-chunk: scan within the chunk, parallel over (B, nc, H)
+    def intra_step(S, inp):
+        rt, kt, vt, wt = inp                     # [B,nc,H,N]
+        out = jnp.einsum("bchn,bchnm->bchm", rt, S)
+        diag = (rt * u[None, None] * kt).sum(-1, keepdims=True) * vt
+        S = wt[..., None] * S + kt[..., None] * vt[..., None, :]
+        return S, out + diag
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (rc, kc, vc, wc))  # [C,B,nc,H,N]
+    S0 = jnp.zeros((B, nc, H, N, N), jnp.float32)
+    S_end, out_intra = jax.lax.scan(intra_step, S0, xs)
+    out_intra = jnp.moveaxis(out_intra, 0, 2)    # [B,nc,C,H,N]
+
+    # ---- inter-chunk: propagate global state across chunks
+    lw = jnp.log(jnp.clip(wc, 1e-38, 1.0))
+    cum_incl = jnp.cumsum(lw, axis=2)
+    cum_excl = cum_incl - lw
+    chunk_decay = jnp.exp(cum_incl[:, :, -1])    # [B,nc,H,N]
+    r_decayed = rc * jnp.exp(cum_excl)           # factors <= 1: stable
+
+    def inter_step(S, inp):
+        rd_c, dec_c, send_c = inp                # [B,C,H,N],[B,H,N],[B,H,N,N]
+        out = jnp.einsum("bthn,bhnm->bthm", rd_c, S)
+        S = dec_c[..., None] * S + send_c
+        return S, out
+
+    xs2 = (jnp.moveaxis(r_decayed, 1, 0), jnp.moveaxis(chunk_decay, 1, 0),
+           jnp.moveaxis(S_end, 1, 0))
+    Sg0 = jnp.zeros((B, H, N, N), jnp.float32)
+    Sg, out_inter = jax.lax.scan(inter_step, Sg0, xs2)
+    out_inter = jnp.moveaxis(out_inter, 0, 1).reshape(B, nc, C, H, N)
+
+    out = (out_intra + out_inter).reshape(B, Tp, H, N)
+    return out[:, :T], Sg
+
+
+def wkv_step(S, r, k, v, w, u):
+    """Single decode step.  r,k,v,w: [B,H,N]; S: [B,H,N,N]."""
+    r, k, v, w = (a.astype(jnp.float32) for a in (r, k, v, w))
+    out = jnp.einsum("bhn,bhnm->bhm", r, S)
+    out = out + (r * u[None] * k).sum(-1, keepdims=True) * v
+    S = w[..., None] * S + k[..., None] * v[..., None, :]
+    return S, out
+
+
+# ----------------------------------------------------------------------
+# Blocks
+# ----------------------------------------------------------------------
+
+def _shift(x: jax.Array, last: Optional[jax.Array] = None) -> jax.Array:
+    """Token shift: previous token's features (zeros / carried state)."""
+    prev = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _decay(p, xw):
+    z = xw.astype(jnp.float32)
+    lora = jnp.tanh(z @ p["wA"]) @ p["wB"]
+    return jnp.exp(-jnp.exp(p["w0"] + lora))     # (0,1)
+
+
+def time_mix(cfg: ModelConfig, p, x: jax.Array,
+             state: Optional[Tuple] = None):
+    """x: [B,T,D].  state (decode): (S [B,H,N,N], last [B,D])."""
+    B, T, D = x.shape
+    N = cfg.rwkv_head_dim
+    H = D // N
+    last = None if state is None else state[1]
+    xx = _shift(x, last)
+
+    def lerp(mu):
+        return x + (xx - x) * mu
+
+    r = lerp(p["mu_r"]) @ p["wr"]
+    k = lerp(p["mu_k"]) @ p["wk"]
+    v = lerp(p["mu_v"]) @ p["wv"]
+    g = jax.nn.silu(lerp(p["mu_g"]) @ p["wg"])
+    w = _decay(p, lerp(p["mu_w"]))               # [B,T,D] fp32
+
+    hs = (B, T, H, N)
+    r4, k4, v4, w4 = (a.reshape(hs) for a in (r, k, v, w))
+    if state is None:
+        wkv, S_final = wkv_chunked(r4, k4, v4, w4, p["u"], cfg.chunk_size)
+    else:
+        S = state[0]
+        S_final, out = wkv_step(S, r4[:, 0], k4[:, 0], v4[:, 0], w4[:, 0],
+                                p["u"])
+        wkv = out[:, None]
+    # per-head group norm
+    wkv = wkv.reshape(B, T, H, N)
+    mu = wkv.mean(-1, keepdims=True)
+    var = wkv.var(-1, keepdims=True)
+    wkv = (wkv - mu) * jax.lax.rsqrt(var + 64e-5)
+    wkv = wkv.reshape(B, T, D) * p["ln_x"]
+    out = (wkv.astype(x.dtype) * g) @ p["wo"]
+    return out, (S_final, x[:, -1])
+
+
+def channel_mix(cfg: ModelConfig, p, x: jax.Array,
+                last: Optional[jax.Array] = None):
+    xx = _shift(x, last)
+    xk = x + (xx - x) * p["mu_k"]
+    xr = x + (xx - x) * p["mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return (kk @ p["wv"]) * jax.nn.sigmoid(xr @ p["wr"]), x[:, -1]
+
+
+# ----------------------------------------------------------------------
+# Model
+# ----------------------------------------------------------------------
+
+def _rwkv_block(cfg: ModelConfig, pl, x: jax.Array):
+    h, _ = time_mix(cfg, pl["tm"], rms_norm(x, pl["ln1"], cfg.norm_eps))
+    x = x + h.astype(x.dtype)
+    h, _ = channel_mix(cfg, pl["cm"], rms_norm(x, pl["ln2"], cfg.norm_eps))
+    return x + h.astype(x.dtype)
+
+
+def rwkv_apply(cfg: ModelConfig, params, tokens: jax.Array,
+               positions: Optional[jax.Array] = None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    body = maybe_remat(lambda xx, pl: (_rwkv_block(cfg, pl, xx),
+                                       jnp.zeros((), jnp.float32)), cfg.remat)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["head"]
+    return softcap(logits, cfg.logit_softcap), jnp.zeros((), jnp.float32)
+
+
+def rwkv_loss(cfg: ModelConfig, params, tokens, targets,
+              aux_weight: float = 0.0):
+    logits, _ = rwkv_apply(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def rwkv_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                    as_shape: bool = False):
+    """Decode state: per layer WKV state + token-shift buffers.
+    max_len is irrelevant (O(1) state) -- the long_500k shape costs the
+    same as short contexts; that is the point of running it (DESIGN.md)."""
+    D = cfg.d_model
+    N = cfg.rwkv_head_dim
+    H = D // N
+    L = cfg.num_layers
+    shapes = {
+        "S": ((L, batch, H, N, N), jnp.float32),
+        "tm_last": ((L, batch, D), cfg.dtype),
+        "cm_last": ((L, batch, D), cfg.dtype),
+    }
+    if as_shape:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+    return {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+
+
+def rwkv_cache_axes(cfg: ModelConfig):
+    return {"S": ("layers", "batch", "heads", None, None),
+            "tm_last": ("layers", "batch", "embed"),
+            "cm_last": ("layers", "batch", "embed")}
+
+
+def rwkv_decode(cfg: ModelConfig, params, token: jax.Array, cache,
+                pos: jax.Array):
+    x = jnp.take(params["embed"], token[:, None], axis=0)   # [B,1,D]
+
+    def body(xx, scanned):
+        pl, S, tml, cml = scanned
+        h, (S2, tml2) = time_mix(cfg, pl["tm"],
+                                 rms_norm(xx, pl["ln1"], cfg.norm_eps),
+                                 state=(S, tml))
+        xx = xx + h.astype(xx.dtype)
+        h, cml2 = channel_mix(cfg, pl["cm"],
+                              rms_norm(xx, pl["ln2"], cfg.norm_eps), cml)
+        return xx + h.astype(xx.dtype), (S2, tml2.astype(cml.dtype),
+                                         cml2.astype(cml.dtype))
+
+    x, (S, tml, cml) = jax.lax.scan(
+        body, x, (params["layers"], cache["S"], cache["tm_last"],
+                  cache["cm_last"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = softcap(x[:, 0] @ params["head"], cfg.logit_softcap)
+    return logits, {"S": S, "tm_last": tml, "cm_last": cml}

@@ -1,0 +1,112 @@
+"""Mamba selective-SSM block (for the Jamba hybrid).
+
+The selective scan h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t is run as a
+``lax.scan`` over time with the per-step decay computed inside the body
+(materializing exp(dtA) over the whole sequence would be [B,T,d_in,N] --
+terabytes at Jamba scale).  The recurrence is elementwise (memory-bound,
+not FLOPs-bound); the projections around it dominate compute.  A
+Mamba2/SSD-style chunked matmul formulation is the known TPU upgrade and
+is listed as a §Perf candidate.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamDef
+
+
+def mamba_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    N = cfg.ssm_d_state
+    K = cfg.ssm_conv
+    dt_rank = max(D // 16, 8)
+    return {
+        "in_proj": ParamDef((D, 2 * d_in), ("embed", "mlp"), dtype=cfg.dtype),
+        "conv_w": ParamDef((K, d_in), ("conv", "mlp"), dtype=cfg.dtype,
+                           scale=0.5),
+        "conv_b": ParamDef((d_in,), ("mlp",), init="zeros", dtype=cfg.dtype),
+        "x_proj": ParamDef((d_in, dt_rank + 2 * N), ("mlp", None),
+                           dtype=cfg.dtype),
+        "dt_proj": ParamDef((dt_rank, d_in), (None, "mlp"), dtype=jnp.float32),
+        "dt_bias": ParamDef((d_in,), ("mlp",), init="zeros",
+                            dtype=jnp.float32),
+        "A_log": ParamDef((d_in, N), ("mlp", "state"), init="zeros",
+                          dtype=jnp.float32),
+        "D_skip": ParamDef((d_in,), ("mlp",), init="ones", dtype=jnp.float32),
+        "out_proj": ParamDef((d_in, D), ("mlp", "embed"), dtype=cfg.dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv along T.  x: [B,T,C]; w: [K,C].
+    prev: [B,K-1,C] carried context for decode."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    out = sum(xp[:, k: k + x.shape[1]] * w[k] for k in range(K))
+    return out + b
+
+
+def mamba_apply(cfg: ModelConfig, p, x: jax.Array,
+                state: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """x: [B,T,D].  state (decode): (h [B,d_in,N], conv_prev [B,K-1,d_in]).
+    Returns (y [B,T,D], new_state)."""
+    B, T, D = x.shape
+    d_in = cfg.ssm_expand * D
+    N = cfg.ssm_d_state
+    K = cfg.ssm_conv
+    prev = None if state is None else state[1]
+
+    xz = x @ p["in_proj"]
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1 = _causal_conv(x1, p["conv_w"], p["conv_b"], prev)
+    new_prev = jnp.concatenate(
+        [prev if prev is not None else jnp.zeros((B, K - 1, d_in), x1.dtype),
+         x1], axis=1)[:, -(K - 1):]
+    x1 = jax.nn.silu(x1)
+
+    dbc = x1 @ p["x_proj"]
+    dt_rank = p["dt_proj"].shape[0]
+    dt_r, Bc, Cc = jnp.split(dbc, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) @ p["dt_proj"]
+                         + p["dt_bias"])                     # [B,T,d_in]
+    A = -jnp.exp(p["A_log"])                                 # [d_in,N]
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp            # [B,d_in],[B,d_in],[B,N],[B,N]
+        decay = jnp.exp(dtt[..., None] * A[None])            # [B,d_in,N]
+        h = decay * h + (dtt * xt)[..., None] * Bt[:, None, :].astype(jnp.float32)
+        y = jnp.einsum("bdn,bn->bd", h, Ct.astype(jnp.float32))
+        return h, y
+
+    h0 = (jnp.zeros((B, d_in, N), jnp.float32) if state is None
+          else state[0])
+    xs = (jnp.moveaxis(x1.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    unroll = max(int(cfg.ssm_scan_unroll), 1)
+    if T % unroll:
+        unroll = 1
+    h, ys = jax.lax.scan(step, h0, xs, unroll=unroll)
+    y = jnp.moveaxis(ys, 0, 1) + x1.astype(jnp.float32) * p["D_skip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"], (h, new_prev)
+
+
+def mamba_state(cfg: ModelConfig, batch: int, as_shape: bool = False,
+                lead: Tuple[int, ...] = ()):
+    d_in = cfg.ssm_expand * cfg.d_model
+    N, K = cfg.ssm_d_state, cfg.ssm_conv
+    hs = lead + (batch, d_in, N)
+    cs = lead + (batch, K - 1, d_in)
+    if as_shape:
+        return (jax.ShapeDtypeStruct(hs, jnp.float32),
+                jax.ShapeDtypeStruct(cs, cfg.dtype))
+    return (jnp.zeros(hs, jnp.float32), jnp.zeros(cs, cfg.dtype))

@@ -1,0 +1,9 @@
+"""Optimizer substrate: AdamW (+bf16 states for 100B+ models), gradient
+clipping, LR schedules, and error-feedback gradient compression."""
+from .adamw import (AdamWConfig, adamw_init, adamw_update, adamw_state_axes,
+                    cosine_schedule, clip_by_global_norm)
+from .compress import CompressionConfig, compress_gradients
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "adamw_state_axes",
+           "cosine_schedule", "clip_by_global_norm",
+           "CompressionConfig", "compress_gradients"]

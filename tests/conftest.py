@@ -1,0 +1,33 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose -- smoke tests and benches must see
+# ONE device; only launch/dryrun.py forces 512 placeholder devices.
+
+
+@pytest.fixture(scope="session")
+def watdiv_small():
+    from repro.core import generate_watdiv
+    return generate_watdiv(8000, seed=7)
+
+
+@pytest.fixture(scope="session")
+def workload_small(watdiv_small):
+    from repro.core import generate_workload
+    return generate_workload(watdiv_small, 800, seed=11)
+
+
+@pytest.fixture(scope="session")
+def partitioner_v(watdiv_small, workload_small):
+    from repro.core import PartitionConfig, WorkloadPartitioner
+    return WorkloadPartitioner(
+        watdiv_small, workload_small,
+        PartitionConfig(kind="vertical", num_sites=6)).run()
+
+
+@pytest.fixture(scope="session")
+def partitioner_h(watdiv_small, workload_small):
+    from repro.core import PartitionConfig, WorkloadPartitioner
+    return WorkloadPartitioner(
+        watdiv_small, workload_small,
+        PartitionConfig(kind="horizontal", num_sites=6)).run()

@@ -1,0 +1,151 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train step on CPU, output shapes + no NaNs (brief req)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch, input_specs
+from repro.models import get_api, init_params, param_count
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+ALL_ARCH_IDS = sorted(ARCHS)
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCH_IDS)
+def test_smoke_forward(arch_id):
+    spec = get_arch(arch_id)
+    cfg = spec.smoke
+    api = get_api(cfg)
+    params = init_params(api.defs(cfg), jax.random.PRNGKey(0))
+    B, S = 2, 32
+    if cfg.embed_inputs:
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                              jnp.float32)
+    else:
+        x = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                               cfg.vocab_size)
+    logits, aux = jax.jit(lambda p, t: api.apply(cfg, p, t))(params, x)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCH_IDS)
+def test_smoke_train_step(arch_id):
+    spec = get_arch(arch_id)
+    cfg = spec.smoke
+    api = get_api(cfg)
+    params = init_params(api.defs(cfg), jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=1e-3)
+    opt = adamw_init(params, opt_cfg)
+    B, S = 2, 16
+    if cfg.embed_inputs:
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                              jnp.float32)
+    else:
+        x = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                               cfg.vocab_size)
+    y = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+
+    @jax.jit
+    def step(p, o, xx, yy):
+        loss, grads = jax.value_and_grad(
+            lambda pp: api.loss(cfg, pp, xx, yy))(p)
+        p2, o2, gn = adamw_update(p, grads, o, opt_cfg)
+        return p2, o2, loss, gn
+
+    p2, o2, loss, gn = step(params, opt, x, y)
+    assert np.isfinite(float(loss))
+    assert np.isfinite(float(gn))
+    # parameters actually changed
+    l0 = jax.tree.leaves(params)[0]
+    l1 = jax.tree.leaves(p2)[0]
+    assert not np.allclose(np.asarray(l0, np.float32),
+                           np.asarray(l1, np.float32))
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCH_IDS)
+def test_smoke_decode_step(arch_id):
+    spec = get_arch(arch_id)
+    cfg = spec.smoke
+    api = get_api(cfg)
+    params = init_params(api.defs(cfg), jax.random.PRNGKey(0))
+    B = 2
+    cache = api.init_cache(cfg, B, 32)
+    tok = (jax.random.normal(jax.random.PRNGKey(3), (B, cfg.d_model),
+                             jnp.float32) if cfg.embed_inputs
+           else jnp.zeros((B,), jnp.int32))
+    logits, cache2 = jax.jit(
+        lambda p, t, c: api.decode(cfg, p, t, c, jnp.int32(0)))(
+        params, tok, cache)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCH_IDS)
+def test_input_specs_all_shapes(arch_id):
+    """input_specs produces well-formed ShapeDtypeStructs per live cell."""
+    spec = get_arch(arch_id)
+    for sname, sh in spec.shapes.items():
+        if sh.skip:
+            assert sh.skip_reason
+            continue
+        ins = input_specs(spec, sname)
+        leaves = jax.tree.leaves(ins)
+        assert leaves and all(isinstance(l, jax.ShapeDtypeStruct)
+                              for l in leaves)
+
+
+@pytest.mark.parametrize("arch_id", ["qwen3-1.7b", "mixtral-8x7b",
+                                     "rwkv6-1.6b"])
+def test_decode_matches_full_forward(arch_id):
+    """Step-by-step decode logits == full-sequence forward logits."""
+    cfg = get_arch(arch_id).smoke
+    api = get_api(cfg)
+    params = init_params(api.defs(cfg), jax.random.PRNGKey(0))
+    T = 10
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, T), 0,
+                              cfg.vocab_size)
+    full, _ = api.apply(cfg, params, toks)
+    cache = api.init_cache(cfg, 1, T)
+    outs = []
+    for t in range(T):
+        lg, cache = api.decode(cfg, params, toks[:, t], cache, jnp.int32(t))
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    err = float(jnp.abs(dec.astype(jnp.float32)
+                        - full.astype(jnp.float32)).max())
+    assert err < 0.25, f"decode/forward divergence {err}"  # bf16 tolerance
+
+
+def test_exact_published_configs():
+    """The full configs carry the exact assigned hyperparameters."""
+    c = get_arch("mixtral-8x7b").config
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size, c.num_experts, c.top_k) == \
+        (32, 4096, 32, 8, 14336, 32000, 8, 2)
+    c = get_arch("llama3-405b").config
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (126, 16384, 128, 8, 53248, 128256)
+    c = get_arch("jamba-1.5-large-398b").config
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.num_experts, c.top_k, c.attn_every) == (72, 8192, 64, 8, 16, 2, 8)
+    c = get_arch("qwen2-moe-a2.7b").config
+    assert (c.num_experts, c.top_k, c.num_shared_experts, c.moe_d_ff) == \
+        (60, 4, 4, 1408)
+    c = get_arch("rwkv6-1.6b").config
+    assert (c.num_layers, c.d_model, c.d_ff, c.vocab_size) == \
+        (24, 2048, 7168, 65536)
+    c = get_arch("nemotron-4-15b").config
+    assert c.mlp_act == "sq_relu" and c.vocab_size == 256000
+    c = get_arch("qwen2.5-3b").config
+    assert c.qkv_bias and c.num_kv_heads == 2 and c.d_ff == 11008
+    c = get_arch("qwen3-1.7b").config
+    assert c.qk_norm and c.d_ff == 6144
+    c = get_arch("musicgen-medium").config
+    assert c.embed_inputs and c.vocab_size == 2048 and c.d_model == 1536
+    c = get_arch("pixtral-12b").config
+    assert c.embed_inputs and c.d_model == 5120 and c.num_layers == 40

@@ -1,0 +1,109 @@
+"""Decomposition (Alg. 3), optimization (Alg. 4) and distributed
+execution (§7.3): the engine must return exactly the same matches as
+direct matching over the whole graph -- for both strategies and the
+baselines."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (BaselineEngine, decompose, optimize,
+                        shape_fragmentation, simulate_throughput,
+                        warp_fragmentation)
+from repro.core.matching import match_pattern
+from repro.core.query import QueryGraph
+
+
+def V(i):
+    return -(i + 1)
+
+
+def _sample_queries(workload, n, seed=0):
+    rnd = random.Random(seed)
+    return rnd.sample(workload.queries, n)
+
+
+def test_decomposition_is_valid(partitioner_v, workload_small):
+    d = partitioner_v.dict
+    cold = partitioner_v.cold_props
+    for q in _sample_queries(workload_small, 20, seed=1):
+        dec = decompose(q, d, cold)
+        # edges partitioned exactly
+        all_edges = [e for sq in dec.subqueries for e in sq.edges]
+        assert sorted(map(hash, all_edges)) == sorted(map(hash, q.edges))
+        for sq, pid in zip(dec.subqueries, dec.pattern_ids):
+            if pid is None:
+                assert all(e.prop in cold for e in sq.edges)
+            else:
+                assert d.lookup_pattern(sq) == pid
+
+
+def test_optimizer_covers_all_subqueries(partitioner_v, workload_small):
+    d = partitioner_v.dict
+    for q in _sample_queries(workload_small, 10, seed=2):
+        dec = decompose(q, d, partitioner_v.cold_props)
+        plan = optimize(dec, d)
+        assert sorted(plan.order) == list(range(len(dec.subqueries)))
+
+
+def test_engine_exact_vertical(partitioner_v, watdiv_small, workload_small):
+    eng = partitioner_v.engine()
+    for q in _sample_queries(workload_small, 30, seed=3):
+        got = eng.execute(q)
+        want = match_pattern(watdiv_small, q)
+        assert got.num_rows == want.num_rows, \
+            f"VF mismatch on {[(e.src, e.dst, e.prop) for e in q.edges]}"
+
+
+def test_engine_exact_horizontal(partitioner_h, watdiv_small, workload_small):
+    eng = partitioner_h.engine()
+    for q in _sample_queries(workload_small, 30, seed=4):
+        got = eng.execute(q)
+        want = match_pattern(watdiv_small, q)
+        assert got.num_rows == want.num_rows
+
+
+def test_baselines_exact(watdiv_small, workload_small, partitioner_v):
+    shape_eng = BaselineEngine(watdiv_small,
+                               shape_fragmentation(watdiv_small, 6))
+    wf, _ = warp_fragmentation(watdiv_small, 6,
+                               partitioner_v.selected_patterns)
+    warp_eng = BaselineEngine(watdiv_small, wf,
+                              local_patterns=partitioner_v.selected_patterns)
+    for q in _sample_queries(workload_small, 15, seed=5):
+        want = match_pattern(watdiv_small, q).num_rows
+        assert shape_eng.execute(q).num_rows == want
+        assert warp_eng.execute(q).num_rows == want
+
+
+def test_vertical_touches_fewer_sites_than_baselines(
+        partitioner_v, watdiv_small, workload_small):
+    """The paper's core claim (§5.1): VF queries touch only relevant
+    fragments; SHAPE/WARP touch all sites."""
+    eng = partitioner_v.engine()
+    shape_eng = BaselineEngine(watdiv_small,
+                               shape_fragmentation(watdiv_small, 6))
+    vf_sites, shape_sites = [], []
+    for q in _sample_queries(workload_small, 20, seed=6):
+        vf_sites.append(len(eng.execute(q).stats.sites_touched))
+        shape_sites.append(len(shape_eng.execute(q).stats.sites_touched))
+    assert np.mean(vf_sites) < np.mean(shape_sites)
+    assert all(s == 6 for s in shape_sites)
+
+
+def test_throughput_ordering(partitioner_v, watdiv_small, workload_small):
+    """Fig. 9 ordering: VF throughput > SHAPE throughput."""
+    qs = workload_small.queries[:60]
+    vf, _ = simulate_throughput(partitioner_v.engine(), qs)
+    shape_eng = BaselineEngine(watdiv_small,
+                               shape_fragmentation(watdiv_small, 6))
+    sh, _ = simulate_throughput(shape_eng, qs)
+    assert vf >= sh
+
+
+def test_single_edge_decomposition_always_exists(partitioner_v):
+    """§7.2: the all-single-edge decomposition is always valid."""
+    d = partitioner_v.dict
+    q = QueryGraph.make([(V(0), V(1), 0), (V(1), V(2), 1)])
+    dec = decompose(q, d, partitioner_v.cold_props)
+    assert dec is not None and dec.cost >= 0

@@ -1,0 +1,134 @@
+"""Fragmentation (Def. 3/10/12) and allocation (Def. 4/13, Alg. 2)
+invariants, including hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Allocation, affinity_matrix, allocate,
+                        allocate_experts, allocate_fragments,
+                        generate_watdiv, generate_workload)
+from repro.core.fragmentation import (MintermPredicate, SimplePredicate,
+                                      enumerate_minterms)
+from repro.core.matching import match_pattern
+
+
+def test_fragmentation_covers_every_edge(partitioner_v, watdiv_small):
+    """Def. 3: union of fragments (hot+cold) covers E(G)."""
+    assert partitioner_v.frag.coverage_ok(watdiv_small)
+
+
+def test_horizontal_covers_every_edge(partitioner_h, watdiv_small):
+    assert partitioner_h.frag.coverage_ok(watdiv_small)
+
+
+def test_redundancy_at_least_one(partitioner_v, partitioner_h, watdiv_small):
+    assert partitioner_v.frag.redundancy_ratio(watdiv_small) >= 1.0
+    assert partitioner_h.frag.redundancy_ratio(watdiv_small) >= 1.0
+
+
+def test_vertical_fragment_edges_match_pattern_props(partitioner_v,
+                                                     watdiv_small):
+    g = watdiv_small
+    for f in partitioner_v.frag.fragments:
+        pat = partitioner_v.frag.patterns[f.pattern_idx]
+        props = {p for p in pat.properties() if p >= 0}
+        assert set(np.unique(g.p[f.edge_ids])) <= props
+
+
+def test_minterms_partition_matches(partitioner_h, watdiv_small):
+    """§5.2: the minterm predicates of one pattern partition its match
+    set (each match satisfies exactly one minterm)."""
+    frag = partitioner_h.frag
+    by_pattern = {}
+    for f in frag.fragments:
+        by_pattern.setdefault(f.pattern_idx, []).append(f)
+    checked = 0
+    for pidx, frags in by_pattern.items():
+        if len(frags) < 2:
+            continue
+        res = match_pattern(watdiv_small, frag.patterns[pidx])
+        if res.num_rows == 0:
+            continue
+        masks = np.stack([f.minterm.mask(res) for f in frags])
+        counts = masks.sum(axis=0)
+        assert (counts <= 1).all()
+        checked += 1
+    assert checked >= 1
+
+
+def test_enumerate_minterms_complete():
+    sps = [SimplePredicate(-1, 5, True), SimplePredicate(-2, 9, True)]
+    mts = enumerate_minterms(0, sps)
+    assert len(mts) == 4
+    signs = {tuple(t.equal for t in m.terms) for m in mts}
+    assert signs == {(True, True), (True, False), (False, True),
+                     (False, False)}
+
+
+# ----------------------------------------------------------------------
+# Allocation
+# ----------------------------------------------------------------------
+
+def test_allocation_is_partition(partitioner_v):
+    alloc = partitioner_v.alloc
+    assert alloc.is_partition(len(partitioner_v.frag.fragments))
+    groups = alloc.groups()
+    all_members = [fi for g in groups for fi in g]
+    assert sorted(all_members) == list(range(len(partitioner_v.frag.fragments)))
+
+
+def test_affinity_symmetric_nonnegative(partitioner_v, workload_small):
+    from repro.core.mining import usage_matrix
+    uniq, w = workload_small.dedup_normalized()
+    U = usage_matrix(partitioner_v.selected_patterns, uniq)
+    A = affinity_matrix(U, w)
+    assert np.allclose(A, A.T)
+    assert (A >= 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(3, 12), st.integers(2, 4), st.integers(0, 1000))
+def test_allocate_produces_m_nonempty_clusters(n, m, seed):
+    if m > n:
+        m = n
+    rng = np.random.default_rng(seed)
+    A = rng.random((n, n))
+    A = A + A.T
+    np.fill_diagonal(A, 0)
+    alloc = allocate(A, m)
+    assert alloc.is_partition(n)
+    sites = set(alloc.site_of.tolist())
+    assert len(sites) == m
+
+
+def test_affinity_pairs_colocated():
+    """Two fragments always accessed together must land on one site."""
+    A = np.zeros((4, 4))
+    A[0, 1] = A[1, 0] = 100.0
+    A[2, 3] = A[3, 2] = 90.0
+    alloc = allocate(A, 2)
+    assert alloc.site_of[0] == alloc.site_of[1]
+    assert alloc.site_of[2] == alloc.site_of[3]
+    assert alloc.site_of[0] != alloc.site_of[2]
+
+
+def test_expert_allocation_balanced():
+    rng = np.random.default_rng(0)
+    co = rng.random((16, 16))
+    co = co + co.T
+    out = allocate_experts(co, 4)
+    counts = np.bincount(out, minlength=4)
+    assert (counts == 4).all()
+
+
+def test_expert_allocation_prefers_coactivated():
+    co = np.zeros((8, 8))
+    # two clear co-activation cliques
+    for grp in ([0, 1, 2, 3], [4, 5, 6, 7]):
+        for a in grp:
+            for b in grp:
+                if a != b:
+                    co[a, b] = 10.0
+    out = allocate_experts(co, 2)
+    assert len({out[i] for i in [0, 1, 2, 3]}) == 1
+    assert len({out[i] for i in [4, 5, 6, 7]}) == 1

@@ -1,0 +1,87 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import attention, join_count, ref, semijoin
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("m,n", [(1, 1), (7, 3), (100, 1000), (1000, 100),
+                                 (513, 1025), (5000, 5000), (20000, 3000)])
+@pytest.mark.parametrize("key_range", [50, 5000])
+def test_semijoin_sweep(m, n, key_range):
+    table = np.sort(RNG.integers(0, key_range, size=n).astype(np.int32))
+    queries = RNG.integers(0, int(key_range * 1.3), size=m).astype(np.int32)
+    got = np.asarray(semijoin(jnp.asarray(queries), jnp.asarray(table)))
+    want = np.asarray(ref.semijoin_mask_ref(jnp.asarray(queries),
+                                            jnp.asarray(table)))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("m,n", [(1, 1), (100, 1000), (5000, 5000),
+                                 (513, 1025)])
+def test_join_count_sweep(m, n):
+    table = np.sort(RNG.integers(0, 400, size=n).astype(np.int32))
+    queries = RNG.integers(0, 500, size=m).astype(np.int32)
+    got = np.asarray(join_count(jnp.asarray(queries), jnp.asarray(table)))
+    want = np.asarray(ref.join_count_ref(jnp.asarray(queries),
+                                         jnp.asarray(table)))
+    np.testing.assert_array_equal(got, want)
+    # counts are exact expansion sizes
+    assert got.sum() == sum(int((table == q).sum()) for q in queries)
+
+
+def test_semijoin_empty():
+    assert semijoin(jnp.zeros(0, jnp.int32), jnp.zeros(5, jnp.int32)).shape \
+        == (0,)
+    assert not bool(semijoin(jnp.zeros(5, jnp.int32),
+                             jnp.zeros(0, jnp.int32)).any())
+
+
+ATTN_CASES = [
+    # B, Hq, Hkv, Sq, Skv, D, causal, window
+    (1, 4, 2, 256, 256, 64, True, None),
+    (2, 8, 8, 128, 128, 32, True, None),
+    (1, 4, 1, 256, 256, 64, True, 128),     # sliding window + GQA 4:1
+    (1, 2, 2, 200, 200, 64, True, None),    # padded path
+    (1, 4, 4, 128, 384, 64, True, None),    # cross (q at end of timeline)
+    (1, 8, 2, 512, 512, 128, True, None),   # MXU-width head dim
+    (1, 4, 4, 256, 256, 64, True, 64),      # window < block
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [np.float32, "bfloat16"])
+def test_attention_sweep(case, dtype):
+    B, Hq, Hkv, Sq, Skv, D, causal, window = case
+    if dtype == "bfloat16":
+        import ml_dtypes
+        dtype = ml_dtypes.bfloat16
+        atol = 4e-2
+    else:
+        atol = 2e-5
+    q = RNG.standard_normal((B, Hq, Sq, D)).astype(dtype)
+    k = RNG.standard_normal((B, Hkv, Skv, D)).astype(dtype)
+    v = RNG.standard_normal((B, Hkv, Skv, D)).astype(dtype)
+    got = np.asarray(attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                               causal=causal, window=window),
+                     dtype=np.float32)
+    want = np.asarray(ref.attention_ref(jnp.asarray(q), jnp.asarray(k),
+                                        jnp.asarray(v), causal=causal,
+                                        window=window), dtype=np.float32)
+    np.testing.assert_allclose(got, want, atol=atol, rtol=atol)
+
+
+def test_attention_kernel_matches_inside_jit():
+    q = jnp.asarray(RNG.standard_normal((1, 4, 128, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 128, 64)), jnp.float32)
+    f = jax.jit(lambda a, b, c: attention(a, b, c, causal=True))
+    np.testing.assert_allclose(
+        np.asarray(f(q, k, v)),
+        np.asarray(ref.attention_ref(q, k, v, causal=True)),
+        atol=2e-5, rtol=2e-5)

@@ -1,0 +1,99 @@
+"""Matching engine vs brute-force homomorphism enumeration (property)."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import RDFGraph, example_graph
+from repro.core.matching import (count_matches, match_edge_ids, match_pattern)
+from repro.core.query import QueryGraph
+
+
+def V(i):
+    return -(i + 1)
+
+
+def brute_force_matches(graph: RDFGraph, pattern: QueryGraph):
+    """Enumerate all homomorphisms by trying every variable assignment."""
+    variables = sorted({v for v in pattern.vertices() if v < 0}, reverse=True)
+    triples = set(zip(graph.s.tolist(), graph.p.tolist(), graph.o.tolist()))
+    out = set()
+    for combo in itertools.product(range(graph.num_vertices),
+                                   repeat=len(variables)):
+        asg = dict(zip(variables, combo))
+        ok = True
+        for e in pattern.edges:
+            s = asg.get(e.src, e.src)
+            d = asg.get(e.dst, e.dst)
+            if (s, e.prop, d) not in triples:
+                ok = False
+                break
+        if ok:
+            out.add(combo)
+    return out
+
+
+@st.composite
+def tiny_graph_and_pattern(draw):
+    nv = draw(st.integers(4, 9))
+    np_ = draw(st.integers(1, 3))
+    ne = draw(st.integers(4, 14))
+    rng = np.random.default_rng(draw(st.integers(0, 10_000)))
+    s = rng.integers(0, nv, ne).astype(np.int32)
+    p = rng.integers(0, np_, ne).astype(np.int32)
+    o = rng.integers(0, nv, ne).astype(np.int32)
+    g = RDFGraph(s, p, o, nv, np_)
+    # connected pattern with <=3 vars
+    n_pe = draw(st.integers(1, 3))
+    edges = [(V(0), V(1), int(rng.integers(0, np_)))]
+    for i in range(1, n_pe):
+        a = draw(st.integers(0, min(i, 1)))
+        edges.append((V(a), V(i + 1), int(rng.integers(0, np_))))
+    return g, QueryGraph.make(edges)
+
+
+@settings(max_examples=40, deadline=None)
+@given(tiny_graph_and_pattern())
+def test_matcher_equals_brute_force(gp):
+    graph, pattern = gp
+    res = match_pattern(graph, pattern)
+    variables = sorted({v for v in pattern.vertices() if v < 0}, reverse=True)
+    got = {tuple(int(res.columns[v][i]) for v in variables)
+           for i in range(res.num_rows)}
+    want = brute_force_matches(graph, pattern)
+    assert got == want
+
+
+def test_constant_patterns(watdiv_small):
+    g = watdiv_small
+    # take an actual edge and query it with its constant endpoints
+    s0, p0, o0 = int(g.s[0]), int(g.p[0]), int(g.o[0])
+    assert count_matches(g, QueryGraph.make([(s0, V(0), p0)])) >= 1
+    assert count_matches(g, QueryGraph.make([(s0, o0, p0)])) >= 1
+    assert count_matches(g, QueryGraph.make([(V(0), o0, p0)])) >= 1
+
+
+def test_match_edge_ids_subset_of_graph(watdiv_small):
+    g = watdiv_small
+    pat = QueryGraph.make([(V(0), V(1), 1), (V(0), V(2), 2)])
+    eids = match_edge_ids(g, pat)
+    assert len(eids) == len(np.unique(eids))
+    assert (eids >= 0).all() and (eids < g.num_edges).all()
+    # every returned edge has one of the pattern's properties
+    assert set(np.unique(g.p[eids])) <= {1, 2}
+
+
+def test_empty_result():
+    g = example_graph()
+    # property that never connects these classes
+    pat = QueryGraph.make([(V(0), V(1), 6), (V(1), V(2), 6)])
+    res = match_pattern(g, pat)
+    assert res.num_rows == 0
+
+
+def test_truncation_flag():
+    g = example_graph()
+    pat = QueryGraph.make([(V(0), V(1), 0)])  # 'type' edges
+    res = match_pattern(g, pat, max_rows=3)
+    assert res.truncated and res.num_rows == 3

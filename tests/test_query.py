@@ -1,0 +1,95 @@
+"""Query-graph layer: canonical DFS codes, normalization, subgraph iso."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.query import (QueryGraph, all_embeddings, find_embedding,
+                              is_subgraph_of, min_dfs_code)
+
+
+def V(i):
+    return -(i + 1)
+
+
+def test_normalize_replaces_constants():
+    q = QueryGraph.make([(5, V(0), 2), (V(0), 9, 3)])
+    n = q.normalize()
+    assert all(v < 0 for v in n.vertices())
+    assert n.properties() == [2, 3]
+
+
+def test_constant_bindings_align_with_normalize():
+    q = QueryGraph.make([(5, V(0), 2), (V(0), 9, 3)])
+    binds = q.constant_bindings()
+    assert set(binds.values()) == {5, 9}
+
+
+def test_canonical_code_distinguishes_structure():
+    star = QueryGraph.make([(V(0), V(1), 1), (V(0), V(2), 2)])
+    path = QueryGraph.make([(V(0), V(1), 1), (V(1), V(2), 2)])
+    assert star.canonical_code() != path.canonical_code()
+
+
+def test_canonical_code_direction_sensitivity():
+    a = QueryGraph.make([(V(0), V(1), 1)])
+    b = QueryGraph.make([(V(1), V(0), 1)])
+    # single edge with variables: same canonical form regardless of naming
+    assert a.canonical_code() == b.canonical_code()
+    fwd = QueryGraph.make([(V(0), V(1), 1), (V(1), V(2), 1)])
+    fan = QueryGraph.make([(V(0), V(1), 1), (V(2), V(1), 1)])
+    assert fwd.canonical_code() != fan.canonical_code()
+
+
+@st.composite
+def small_graphs(draw):
+    n_edges = draw(st.integers(1, 5))
+    n_vars = draw(st.integers(1, 4))
+    edges = []
+    for i in range(n_edges):
+        s = draw(st.integers(0, n_vars - 1))
+        d = draw(st.integers(0, n_vars - 1))
+        p = draw(st.integers(0, 3))
+        edges.append((V(s), V(d), p))
+    # connect: chain every edge i to share a vertex with edge 0..i-1
+    return QueryGraph.make(edges)
+
+
+@settings(max_examples=60, deadline=None)
+@given(small_graphs(), st.permutations(list(range(8))))
+def test_canonical_code_invariant_under_relabeling(g, perm):
+    """Property: min DFS code is invariant under variable renaming."""
+    mapping = {V(i): V(perm[i]) for i in range(8)}
+    g2 = QueryGraph.make([(mapping[e.src], mapping[e.dst], e.prop)
+                          for e in g.edges])
+    assert min_dfs_code(g) == min_dfs_code(g2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(small_graphs())
+def test_self_subgraph(g):
+    assert is_subgraph_of(g, g)
+
+
+def test_subgraph_iso_embedding_is_consistent():
+    pat = QueryGraph.make([(V(0), V(1), 1)])
+    q = QueryGraph.make([(V(0), V(1), 1), (V(1), V(2), 2)])
+    emb = find_embedding(pat, q)
+    assert emb is not None
+    assert emb[V(0)] == V(0) and emb[V(1)] == V(1)
+    assert len(all_embeddings(pat, q)) == 1
+
+
+def test_subgraph_iso_respects_labels_and_direction():
+    pat = QueryGraph.make([(V(0), V(1), 7)])
+    q = QueryGraph.make([(V(0), V(1), 1)])
+    assert not is_subgraph_of(pat, q)
+    pat2 = QueryGraph.make([(V(0), V(1), 1), (V(1), V(0), 1)])
+    q2 = QueryGraph.make([(V(0), V(1), 1)])
+    assert not is_subgraph_of(pat2, q2)
+
+
+def test_embeddings_injective_on_edges():
+    # pattern with two identical-label edges cannot map onto one edge
+    pat = QueryGraph.make([(V(0), V(1), 1), (V(0), V(2), 1)])
+    q = QueryGraph.make([(V(0), V(1), 1)])
+    assert not is_subgraph_of(pat, q)

@@ -1,0 +1,89 @@
+"""Algorithm 1 (frequent access pattern selection) invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mining import FrequentPattern
+from repro.core.query import QueryGraph
+from repro.core.selection import (SelectionResult, select_patterns,
+                                  total_benefit, benefit_vector)
+
+
+def V(i):
+    return -(i + 1)
+
+
+def _mk_patterns(edge_counts):
+    out = []
+    for i, ne in enumerate(edge_counts):
+        edges = [(V(0), V(j + 1), i * 10 + j) for j in range(ne)]
+        out.append(FrequentPattern(QueryGraph.make(edges), 1, set()))
+    return out
+
+
+def test_integrity_seed_always_selected():
+    pats = _mk_patterns([1, 1, 2, 3])
+    usage = np.ones((4, 4), np.int8)
+    w = np.ones(4, np.int64)
+    sizes = np.array([10, 10, 50, 80])
+    r = select_patterns(pats, usage, w, sizes, storage_constraint=200)
+    assert set(r.seed) == {0, 1}
+    assert set(r.seed) <= set(r.selected)
+
+
+def test_storage_constraint_respected():
+    pats = _mk_patterns([1, 2, 3, 4])
+    usage = np.ones((6, 4), np.int8)
+    w = np.ones(6, np.int64)
+    sizes = np.array([10, 100, 100, 100])
+    r = select_patterns(pats, usage, w, sizes, storage_constraint=120)
+    assert r.total_size <= 120
+
+
+def test_raises_when_seed_exceeds_storage():
+    pats = _mk_patterns([1, 1])
+    usage = np.ones((2, 2), np.int8)
+    with pytest.raises(ValueError):
+        select_patterns(pats, usage, np.ones(2, np.int64),
+                        np.array([60, 60]), storage_constraint=100)
+
+
+def test_larger_patterns_preferred_when_equal_hit():
+    # Def. 8: benefit scales with |E(p)| -- the 3-edge pattern should win
+    # over a 2-edge one when both hit the same queries and both fit.
+    pats = _mk_patterns([1, 2, 3])
+    usage = np.array([[1, 1, 1]] * 5, np.int8)
+    w = np.ones(5, np.int64)
+    sizes = np.array([10, 30, 30])
+    r = select_patterns(pats, usage, w, sizes, storage_constraint=70)
+    assert 2 in r.selected  # the 3-edge pattern
+
+
+def test_benefit_is_max_per_query():
+    pats = _mk_patterns([1, 2])
+    usage = np.array([[1, 1], [1, 0]], np.int8)
+    w = np.array([1, 1], np.int64)
+    B = benefit_vector(pats, usage)
+    # query 0 counts only the larger pattern (2), query 1 counts 1
+    assert total_benefit(B, w, [0, 1]) == 2 + 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6), st.integers(3, 12), st.integers(0, 100))
+def test_selection_invariants_random(n_pat, n_q, seed):
+    """Property: output selection is within budget, contains the seed,
+    and its benefit >= seed-only benefit (monotone improvement)."""
+    rng = np.random.default_rng(seed)
+    edge_counts = [1] + [int(rng.integers(1, 4)) for _ in range(n_pat - 1)]
+    pats = _mk_patterns(edge_counts)
+    usage = rng.integers(0, 2, size=(n_q, n_pat)).astype(np.int8)
+    usage[:, 0] = 1
+    w = rng.integers(1, 5, size=n_q).astype(np.int64)
+    sizes = rng.integers(5, 40, size=n_pat).astype(np.int64)
+    seed_size = sizes[[i for i, p in enumerate(pats) if p.num_edges == 1]].sum()
+    sc = int(seed_size + rng.integers(10, 100))
+    r = select_patterns(pats, usage, w, sizes, sc)
+    assert r.total_size <= sc
+    assert set(r.seed) <= set(r.selected)
+    B = benefit_vector(pats, usage)
+    assert r.benefit >= total_benefit(B, w, r.seed) - 1e-9

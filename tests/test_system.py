@@ -1,0 +1,86 @@
+"""End-to-end behaviour tests for the paper's system (Fig. 3 pipeline):
+offline phase produces a coherent engine; online phase answers queries
+exactly; the paper's qualitative claims hold on WatDiv-like data."""
+import numpy as np
+import pytest
+
+from repro.core import (PartitionConfig, WorkloadPartitioner,
+                        generate_watdiv, generate_workload,
+                        shape_fragmentation, simulate_throughput,
+                        warp_fragmentation, BaselineEngine)
+from repro.core.matching import match_pattern
+
+
+def test_offline_pipeline_stats(partitioner_v):
+    s = partitioner_v.stats
+    assert s.num_patterns_mined >= s.num_patterns_selected > 0
+    assert s.num_fragments == s.num_patterns_selected  # vertical: 1:1
+    assert 0.9 <= s.hit_rate <= 1.0   # templates dominate the workload
+    assert s.redundancy_ratio >= 1.0
+    assert s.benefit > 0
+
+
+def test_horizontal_has_at_least_as_many_fragments(partitioner_v,
+                                                   partitioner_h):
+    assert len(partitioner_h.frag.fragments) >= \
+        len(partitioner_v.frag.fragments)
+
+
+def test_workload_hit_rate_like_paper(watdiv_small):
+    """§1.1: with minSup at 0.1% of |Q|, the vast majority of queries are
+    isomorphic to some frequent pattern (paper: 97% for DBpedia)."""
+    wl = generate_workload(watdiv_small, 2000, seed=5)
+    pp = WorkloadPartitioner(watdiv_small, wl,
+                             PartitionConfig(num_sites=4)).run()
+    assert pp.stats.hit_rate >= 0.9
+
+
+def test_redundancy_ordering(watdiv_small, workload_small, partitioner_v,
+                             partitioner_h):
+    """Table 1: SHAPE redundancy is the largest; VF/HF are modest."""
+    shape_r = shape_fragmentation(watdiv_small, 6).redundancy_ratio(
+        watdiv_small)
+    vf_r = partitioner_v.frag.redundancy_ratio(watdiv_small)
+    hf_r = partitioner_h.frag.redundancy_ratio(watdiv_small)
+    assert shape_r > vf_r
+    assert shape_r > hf_r
+    assert hf_r >= vf_r * 0.99   # HF >= VF (minterm splits share edges)
+
+
+def test_full_stack_query_answers(partitioner_v, partitioner_h,
+                                  watdiv_small, workload_small):
+    """Every strategy answers every sampled query exactly."""
+    import random
+    rnd = random.Random(9)
+    engines = [partitioner_v.engine(), partitioner_h.engine()]
+    for q in rnd.sample(workload_small.queries, 20):
+        want = match_pattern(watdiv_small, q).num_rows
+        for eng in engines:
+            assert eng.execute(q).num_rows == want
+
+
+def test_elastic_refragmentation(partitioner_v):
+    """Node-failure path for the RDF engine: re-cluster allocation with
+    Algorithm 2 at m' sites; result is a valid partition."""
+    from repro.core import allocate_fragments
+    from repro.core.mining import usage_matrix
+    uniq, w = partitioner_v.workload.dedup_normalized()
+    U = usage_matrix(partitioner_v.selected_patterns, uniq)
+    smaller = allocate_fragments(partitioner_v.frag, U, w, num_sites=3)
+    assert smaller.is_partition(len(partitioner_v.frag.fragments))
+    assert len(set(smaller.site_of.tolist())) == 3
+
+
+def test_scalability_trend():
+    """Fig. 11: response time grows slowly with dataset size."""
+    rts = []
+    for n in [4000, 8000]:
+        g = generate_watdiv(n, seed=2)
+        wl = generate_workload(g, 300, seed=3)
+        pp = WorkloadPartitioner(g, wl, PartitionConfig(num_sites=4)).run()
+        eng = pp.engine()
+        stats = [eng.execute(q).stats.response_time
+                 for q in wl.queries[:30]]
+        rts.append(np.mean(stats))
+    # bigger data -> not catastrophically slower (sub-linear growth)
+    assert rts[1] < rts[0] * 4.0
