@@ -1,0 +1,83 @@
+"""Adaptive-vs-static under workload drift: replay a uniform ->
+star-heavy -> chain-heavy query stream against (a) the seed
+fragmentation frozen at build time and (b) the online adaptive engine
+(repro.online), and compare cumulative shipped bytes after the drift
+point.
+
+Also replays a stationary stream to confirm the drift detector stays
+silent (zero re-partitions) when nothing changes.
+
+Emits CSV rows compatible with paper_benches (``bench,variant,metric,
+value``).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import (PartitionConfig, QueryGraph, WorkloadPartitioner,
+                        generate_drifting_workload, generate_watdiv)
+from repro.online import AdaptiveConfig, AdaptiveEngine
+
+from .paper_benches import emit
+
+MIGRATION_BUDGET = 4_000_000
+
+
+def _replay(engine, queries: List[QueryGraph]) -> List[int]:
+    return [engine.execute(q).stats.comm_bytes for q in queries]
+
+
+def bench_adaptive() -> None:
+    g = generate_watdiv(20_000, seed=5)
+    cfg = PartitionConfig(kind="vertical", num_sites=8)
+
+    # design-time workload: uniform template popularity
+    wl_build = generate_drifting_workload(g, [(1_000, {})], seed=11)
+
+    # drifting stream: uniform warm-up, then star-heavy, then chain-heavy
+    drift_point = 300
+    stream = generate_drifting_workload(
+        g, [(drift_point, {}), (700, {"S": 12.0}), (700, {"L": 12.0})],
+        seed=23)
+
+    static = WorkloadPartitioner(g, wl_build, cfg).run().engine()
+    adaptive = AdaptiveEngine(
+        WorkloadPartitioner(g, wl_build, cfg).run(),
+        AdaptiveConfig(epoch_len=150,
+                       migration_budget_bytes=MIGRATION_BUDGET))
+
+    comm_static = _replay(static, stream.queries)
+    comm_adaptive = _replay(adaptive, stream.queries)
+
+    after_static = int(np.sum(comm_static[drift_point:]))
+    after_adaptive = int(np.sum(comm_adaptive[drift_point:]))
+    emit("bench_adaptive", "static", "comm_bytes_total",
+         float(np.sum(comm_static)))
+    emit("bench_adaptive", "adaptive", "comm_bytes_total",
+         float(np.sum(comm_adaptive)))
+    emit("bench_adaptive", "static", "comm_bytes_after_drift", after_static)
+    emit("bench_adaptive", "adaptive", "comm_bytes_after_drift",
+         after_adaptive)
+    emit("bench_adaptive", "adaptive", "repartitions",
+         adaptive.num_repartitions)
+    emit("bench_adaptive", "adaptive", "moved_bytes",
+         adaptive.total_moved_bytes)
+    emit("bench_adaptive", "adaptive", "migration_budget_bytes",
+         MIGRATION_BUDGET)
+    emit("bench_adaptive", "adaptive", "wins_after_drift",
+         1.0 if after_adaptive < after_static else 0.0)
+
+    # stationary control: same distribution as build -> no re-partitions
+    calm = generate_drifting_workload(g, [(900, {})], seed=31)
+    control = AdaptiveEngine(
+        WorkloadPartitioner(g, wl_build, cfg).run(),
+        AdaptiveConfig(epoch_len=150,
+                       migration_budget_bytes=MIGRATION_BUDGET))
+    _replay(control, calm.queries)
+    emit("bench_adaptive", "stationary", "repartitions",
+         control.num_repartitions)
+
+
+ALL = [bench_adaptive]

@@ -1,15 +1,20 @@
-"""Benchmark harness: one function per paper table/figure + the roofline
-report from the dry-run artifacts.
+"""Benchmark harness: one function per paper table/figure + the adaptive
+drift benchmark + the roofline report from the dry-run artifacts.
 
   PYTHONPATH=src python -m benchmarks.run                 # all
   PYTHONPATH=src python -m benchmarks.run --only fig9     # substring match
+  PYTHONPATH=src python -m benchmarks.run --json reports/BENCH_pr1.json
   PYTHONPATH=src python -m benchmarks.run --roofline-dir reports/dryrun_baseline
 
-Output: CSV rows ``bench,variant,metric,value``.
+Output: CSV rows ``bench,variant,metric,value``; with ``--json PATH`` the
+same rows are also written as a machine-readable BENCH_*.json so the
+perf trajectory can be tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -18,26 +23,44 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on bench names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as a BENCH_*.json file")
     ap.add_argument("--roofline-dir", default="reports/dryrun_baseline")
     ap.add_argument("--skip-roofline", action="store_true")
     args = ap.parse_args()
 
-    from . import paper_benches
+    from . import adaptive, paper_benches
     from .roofline import bench_roofline
 
-    for fn in list(paper_benches.ALL):
+    timings = {}
+    for fn in list(paper_benches.ALL) + list(adaptive.ALL):
         name = fn.__name__
         if args.only and args.only not in name:
             continue
         t0 = time.perf_counter()
         print(f"# --- {name} ---", file=sys.stderr)
         fn()
-        print(f"# {name}: {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+        timings[name] = time.perf_counter() - t0
+        print(f"# {name}: {timings[name]:.1f}s", file=sys.stderr)
 
     if not args.skip_roofline and (args.only is None
                                    or "roofline" in args.only):
         print("# --- roofline ---", file=sys.stderr)
         bench_roofline(args.roofline_dir)
+
+    if args.json:
+        payload = {
+            "rows": [{"bench": b, "variant": v, "metric": m, "value": val}
+                     for b, v, m, val in paper_benches.ROWS],
+            "bench_seconds": timings,
+        }
+        d = os.path.dirname(args.json)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {len(payload['rows'])} rows to {args.json}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -10,10 +10,13 @@ Pipeline (offline):
       -> dictionary.DataDictionary.build      (§7.1)
 Online:
     executor.DistributedEngine.execute        (§7.2-7.3, Algorithms 3+4)
+    (adaptive re-fragmentation control plane: see repro.online -- it
+    hooks DistributedEngine.post_execute_hooks to watch the stream)
 """
 from .graph import RDFGraph, example_graph, generate_watdiv
 from .query import QueryGraph, is_subgraph_of, find_embedding
-from .workload import Workload, generate_workload, watdiv_templates
+from .workload import (Workload, generate_workload, watdiv_templates,
+                       generate_drifting_workload, class_template_probs)
 from .mining import (FrequentPattern, mine_frequent_patterns,
                      frequent_properties, usage_matrix)
 from .selection import SelectionResult, select_patterns
@@ -24,7 +27,7 @@ from .allocation import (Allocation, affinity_matrix, allocate,
 from .dictionary import DataDictionary
 from .decomposition import Decomposition, decompose
 from .optimizer import JoinPlan, optimize
-from .executor import (CostModel, DistributedEngine, QueryResult,
+from .executor import (CostModel, DistributedEngine, ExecStats, QueryResult,
                        simulate_throughput)
 from .baselines import (BaselineEngine, BaselineFragmentation,
                         shape_fragmentation, warp_fragmentation)
@@ -34,13 +37,15 @@ __all__ = [
     "RDFGraph", "example_graph", "generate_watdiv",
     "QueryGraph", "is_subgraph_of", "find_embedding",
     "Workload", "generate_workload", "watdiv_templates",
+    "generate_drifting_workload", "class_template_probs",
     "FrequentPattern", "mine_frequent_patterns", "frequent_properties",
     "usage_matrix", "SelectionResult", "select_patterns",
     "Fragment", "Fragmentation", "build_fragmentation",
     "vertical_fragmentation", "horizontal_fragmentation",
     "Allocation", "affinity_matrix", "allocate", "allocate_fragments",
     "allocate_experts", "DataDictionary", "Decomposition", "decompose",
-    "JoinPlan", "optimize", "CostModel", "DistributedEngine", "QueryResult",
+    "JoinPlan", "optimize", "CostModel", "DistributedEngine", "ExecStats",
+    "QueryResult",
     "simulate_throughput", "BaselineEngine", "BaselineFragmentation",
     "shape_fragmentation", "warp_fragmentation",
     "WorkloadPartitioner", "PartitionConfig",

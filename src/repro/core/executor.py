@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -137,6 +137,11 @@ class DistributedEngine:
         # materialize per-fragment subgraphs + their match indexes lazily
         self._frag_graphs: Dict[Tuple[str, int], RDFGraph] = {}
         self._frag_index: Dict[Tuple[str, int], _PropIndex] = {}
+        # online hook point: called as hook(query, result) after every
+        # execute() -- the adaptive control plane (repro.online) feeds its
+        # workload monitor through this without wrapping the hot path.
+        self.post_execute_hooks: List[Callable[[QueryGraph, "QueryResult"],
+                                               None]] = []
 
     # -- fragment access ------------------------------------------------
     def _fragment(self, kind: str, fi: int) -> Tuple[RDFGraph, _PropIndex]:
@@ -254,7 +259,10 @@ class DistributedEngine:
 
         stats = ExecStats(rt, comm_bytes, sites_touched, busy,
                           _nrows(acc), len(decomp.subqueries))
-        return QueryResult(acc, _nrows(acc), stats)
+        result = QueryResult(acc, _nrows(acc), stats)
+        for hook in self.post_execute_hooks:
+            hook(query, result)
+        return result
 
 
 def _dedup_rows(cols: Dict[int, np.ndarray]) -> Dict[int, np.ndarray]:

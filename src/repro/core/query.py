@@ -182,6 +182,14 @@ def min_dfs_code(g: QueryGraph) -> Tuple:
         adj.setdefault(e.src, []).append((idx, e.dst, 0))
         adj.setdefault(e.dst, []).append((idx, e.src, 1))
 
+    # Self-loops break gSpan's minimal-extension pruning: a loop is only
+    # consumable (as a backward edge) while its vertex is rightmost, so
+    # always following the minimal extension can dead-end before the loop
+    # is emitted.  With a loop present we branch on *every* extension --
+    # still exact (prefix-pruned against the incumbent), and the min over
+    # all traversals is the same canonical form.
+    has_loop = any(e.src == e.dst for e in edges)
+
     best: List[Optional[Tuple]] = [None]
 
     def rec(code: List[Tuple], disc: Dict[int, int], used: FrozenSet[int],
@@ -215,7 +223,7 @@ def min_dfs_code(g: QueryGraph) -> Tuple:
             return
         tmin = min(t for t, _, _ in ext)
         for t, eidx, newv in ext:
-            if t != tmin:
+            if t != tmin and not has_loop:
                 continue
             code.append(t)
             if newv is not None:

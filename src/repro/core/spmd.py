@@ -221,6 +221,23 @@ def local_match(s: jax.Array, p: jax.Array, o: jax.Array,
 # shard_map distributed execution
 # ----------------------------------------------------------------------
 
+def compat_shard_map(fn, mesh, in_specs, out_specs):
+    """shard_map across jax versions: top-level ``jax.shard_map`` with
+    ``check_vma`` (new), with ``check_rep`` (mid), or
+    ``jax.experimental.shard_map`` (jax < 0.5).  Replication checking is
+    off in all cases (manual collectives)."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)
+
+
 def make_spmd_matcher(mesh: Mesh, axis: str, pattern: QueryGraph,
                       capacity: int):
     """Build a jitted SPMD function: site-sharded (s,p,o) -> gathered
@@ -235,9 +252,9 @@ def make_spmd_matcher(mesh: Mesh, axis: str, pattern: QueryGraph,
         g_valid = jax.lax.all_gather(valid, axis, tiled=True)
         return g_bind, g_valid
 
-    fn = jax.shard_map(per_site, mesh=mesh,
-                       in_specs=(P(axis, None), P(axis, None), P(axis, None)),
-                       out_specs=(P(), P()), check_vma=False)
+    fn = compat_shard_map(per_site, mesh,
+                          (P(axis, None), P(axis, None), P(axis, None)),
+                          (P(), P()))
     return jax.jit(fn)
 
 

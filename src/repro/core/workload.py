@@ -116,10 +116,14 @@ TEMPLATE_CLASS = ["L", "L", "L", "S", "S", "S", "S", "F", "F", "C", "C",
 def generate_workload(graph: RDFGraph, num_queries: int, seed: int = 0,
                       templates: Optional[List[QueryGraph]] = None,
                       zipf_a: float = 1.3, cold_fraction: float = 0.03,
-                      constant_fraction: float = 0.5) -> Workload:
+                      constant_fraction: float = 0.5,
+                      template_probs: Optional[Sequence[float]] = None
+                      ) -> Workload:
     """Instantiate templates with actual graph terms (WatDiv §8.1 style).
 
-    - template popularity ~ Zipf (the '80/20' rule of §3);
+    - template popularity ~ Zipf (the '80/20' rule of §3), or an explicit
+      ``template_probs`` vector (the drifting-workload generator below
+      uses this to shift popularity mass between structural classes);
     - ``constant_fraction`` of queries bind one variable to a constant
       drawn from the data (feeds §5.2 minterm predicate mining; drawn
       Zipf so that the same constants recur across queries);
@@ -129,8 +133,15 @@ def generate_workload(graph: RDFGraph, num_queries: int, seed: int = 0,
         templates = watdiv_templates()
     rng = np.random.default_rng(seed)
     n_t = len(templates)
-    pops = 1.0 / np.arange(1, n_t + 1) ** zipf_a
-    pops /= pops.sum()
+    if template_probs is not None:
+        pops = np.asarray(template_probs, dtype=np.float64)
+        if len(pops) != n_t:
+            raise ValueError(f"template_probs has {len(pops)} entries for "
+                             f"{n_t} templates")
+        pops = pops / pops.sum()
+    else:
+        pops = 1.0 / np.arange(1, n_t + 1) ** zipf_a
+        pops /= pops.sum()
 
     cold_props = [PROP["dislikes"], PROP["caption"], PROP["tag"]]
 
@@ -159,4 +170,40 @@ def generate_workload(graph: RDFGraph, num_queries: int, seed: int = 0,
                      for s, d, p in edges]
         queries.append(QueryGraph.make(edges))
         tids.append(ti)
+    return Workload(queries, tids)
+
+
+def class_template_probs(class_weights: Dict[str, float],
+                         base: float = 0.05) -> np.ndarray:
+    """Template-probability vector from structural-class weights, e.g.
+    ``{"S": 8.0}`` makes the workload star-heavy.  ``base`` is the floor
+    weight every template keeps so no shape disappears entirely."""
+    w = np.array([base + class_weights.get(cls, 0.0)
+                  for cls in TEMPLATE_CLASS], dtype=np.float64)
+    return w / w.sum()
+
+
+def generate_drifting_workload(graph: RDFGraph,
+                               phases: Sequence[Tuple[int, Dict[str, float]]],
+                               seed: int = 0,
+                               cold_fraction: float = 0.03,
+                               constant_fraction: float = 0.5) -> Workload:
+    """Concatenate workload phases with different template popularity --
+    the drift stream the online subsystem (repro.online) adapts to.
+
+    ``phases``: list of (num_queries, class_weights); class weights of
+    ``{}`` mean uniform popularity over all templates.
+    """
+    queries: List[QueryGraph] = []
+    tids: List[int] = []
+    for k, (n, cw) in enumerate(phases):
+        probs = (class_template_probs(cw) if cw
+                 else np.ones(len(TEMPLATE_CLASS)))   # uniform phase
+        wl = generate_workload(
+            graph, n, seed=seed + 7919 * k,
+            cold_fraction=cold_fraction,
+            constant_fraction=constant_fraction,
+            template_probs=probs)
+        queries.extend(wl.queries)
+        tids.extend(wl.template_ids or [-1] * len(wl.queries))
     return Workload(queries, tids)

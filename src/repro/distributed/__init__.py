@@ -1,7 +1,7 @@
 """Distributed runtime utilities: elastic re-meshing, straggler
 mitigation, failure detection/recovery orchestration."""
 from .elastic import ElasticMeshManager, replan_allocation
-from .straggler import StragglerMitigator, WorkItem, WorkQueue
+from .straggler import CompletedItem, StragglerMitigator, WorkItem, WorkQueue
 
 __all__ = ["ElasticMeshManager", "replan_allocation", "StragglerMitigator",
-           "WorkItem", "WorkQueue"]
+           "CompletedItem", "WorkItem", "WorkQueue"]

@@ -40,10 +40,16 @@ class WorkQueue:
     stealing -- used by tests and by the executor's makespan model."""
 
     def __init__(self, num_sites: int, steal: bool = True,
-                 site_speed: Optional[List[float]] = None):
+                 site_speed: Optional[List[float]] = None,
+                 cost_fn: Optional[Callable[[WorkItem, int], float]] = None):
+        """``cost_fn(item, site) -> seconds`` overrides the default
+        ``est_cost / speed[site]`` duration model (e.g. deterministic
+        test schedules, or per-link cost models where an item's duration
+        depends on which site runs it)."""
         self.num_sites = num_sites
         self.steal = steal
         self.speed = site_speed or [1.0] * num_sites
+        self.cost_fn = cost_fn
         self.queues: List[List[WorkItem]] = [[] for _ in range(num_sites)]
 
     def submit(self, items: List[WorkItem]) -> None:
@@ -73,7 +79,8 @@ class WorkQueue:
                 s = min((j for j in range(self.num_sites) if pending[j]),
                         key=lambda j: site_time[j])
                 it = pending[s].pop(0)
-            dur = it.est_cost / self.speed[s]
+            dur = (self.cost_fn(it, s) if self.cost_fn is not None
+                   else it.est_cost / self.speed[s])
             done.append(CompletedItem(it.item_id, s, site_time[s],
                                       site_time[s] + dur))
             site_time[s] += dur

@@ -1,0 +1,184 @@
+"""The adaptive control loop: monitor -> drift -> refragment -> migrate.
+
+``AdaptiveEngine`` wraps the exact host engine (``core.executor``): every
+executed query feeds the workload monitor through the executor's
+post-execute hook, and between query *epochs* (every ``epoch_len``
+queries) the drift detector compares the live distribution against the
+one the current fragmentation was designed for.  When it fires (and the
+cooldown has passed), the engine
+
+1. re-mines + re-selects on the monitor snapshot, warm-started from the
+   incumbent FAP set (``online.refragment``);
+2. plans a cost-bounded migration realizing the new allocation within
+   ``migration_budget_bytes`` (``online.migration``), scheduling the
+   shipment through the straggler-aware work queue;
+3. swaps in a fresh ``DistributedEngine`` over the new fragmentation at
+   the *realized* (post-budget) placement.
+
+Every epoch is accounted: shipped query bytes, response time, migrated
+bytes, migration makespan -- the before/after communication-cost ledger
+the adaptive-vs-static benchmark reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Set
+
+from ..core.allocation import Allocation, fragment_affinity
+from ..core.dictionary import DataDictionary
+from ..core.executor import CostModel, DistributedEngine, QueryResult
+from ..core.fragmentation import Fragmentation
+from ..core.graph import RDFGraph
+from ..core.pipeline import PartitionConfig, WorkloadPartitioner
+from ..core.query import QueryGraph
+from .drift import DriftDetector, DriftReport
+from .migration import (BYTES_PER_EDGE, MigrationPlan, plan_migration,
+                        schedule_migration)
+from .monitor import WorkloadMonitor
+from .refragment import RefragmentResult, refragment
+
+
+@dataclasses.dataclass
+class AdaptiveConfig:
+    epoch_len: int = 200                  # queries per epoch
+    decay: float = 0.995                  # monitor half-life ~ 138 queries
+    monitor_capacity: int = 512
+    tv_threshold: float = 0.15
+    coverage_drop_threshold: float = 0.10
+    min_effective_weight: float = 50.0
+    cooldown_epochs: int = 1              # epochs between re-partitions
+    migration_budget_bytes: int = 4_000_000
+    bytes_per_edge: float = BYTES_PER_EDGE
+    link_bytes_per_sec: float = 1.0e9
+
+
+@dataclasses.dataclass
+class EpochReport:
+    epoch: int
+    queries: int
+    comm_bytes: int                       # query shipping this epoch
+    response_time: float                  # summed simulated wall-clock
+    drift: Optional[DriftReport]
+    repartitioned: bool
+    moved_bytes: int
+    deferred_moves: int
+    migration_makespan_sec: float
+
+
+class AdaptiveEngine:
+    """Self-re-fragmenting distributed engine (control plane over
+    ``DistributedEngine``)."""
+
+    def __init__(self, partitioner: WorkloadPartitioner,
+                 config: Optional[AdaptiveConfig] = None,
+                 cost: Optional[CostModel] = None):
+        assert partitioner.frag is not None, "run() the partitioner first"
+        self.graph: RDFGraph = partitioner.graph
+        self.pcfg: PartitionConfig = partitioner.cfg
+        self.cfg = config or AdaptiveConfig()
+        self.cost = cost
+        self.frag: Fragmentation = partitioner.frag
+        self.alloc: Allocation = partitioner.alloc
+        self.selected_patterns: List[QueryGraph] = \
+            list(partitioner.selected_patterns)
+        self.cold_props: Set[int] = set(partitioner.cold_props)
+        self.engine = partitioner.engine(cost)
+
+        self.monitor = WorkloadMonitor(self.graph.num_properties,
+                                       decay=self.cfg.decay,
+                                       capacity=self.cfg.monitor_capacity)
+        # seed the monitor with the design workload so the drift
+        # reference reflects what the fragmentation was built from
+        self.monitor.bulk_load(partitioner.workload)
+        self.detector = DriftDetector(
+            tv_threshold=self.cfg.tv_threshold,
+            coverage_drop_threshold=self.cfg.coverage_drop_threshold,
+            min_effective_weight=self.cfg.min_effective_weight)
+        self.detector.set_reference(self.monitor, self.selected_patterns)
+        self._install_hook()
+
+        self.epoch = 0
+        self.epochs: List[EpochReport] = []
+        self.total_comm_bytes = 0
+        self.total_moved_bytes = 0
+        self.num_repartitions = 0
+        self._epoch_queries = 0
+        self._epoch_comm = 0
+        self._epoch_rt = 0.0
+        self._cooldown = 0
+
+    # ------------------------------------------------------------------
+    def _install_hook(self) -> None:
+        self.engine.post_execute_hooks.append(
+            lambda q, r: self.monitor.observe(q))
+
+    @property
+    def dict(self) -> DataDictionary:          # simulate_throughput API
+        return self.engine.dict
+
+    # ------------------------------------------------------------------
+    def execute(self, query: QueryGraph) -> QueryResult:
+        r = self.engine.execute(query)
+        self._epoch_queries += 1
+        self._epoch_comm += r.stats.comm_bytes
+        self._epoch_rt += r.stats.response_time
+        self.total_comm_bytes += r.stats.comm_bytes
+        if self._epoch_queries >= self.cfg.epoch_len:
+            self.end_epoch()
+        return r
+
+    # ------------------------------------------------------------------
+    def end_epoch(self) -> EpochReport:
+        """Close the epoch: drift check, optional repartition+migration."""
+        drift: Optional[DriftReport] = None
+        repartitioned = False
+        moved = 0
+        deferred = 0
+        makespan = 0.0
+        if self._cooldown > 0:
+            self._cooldown -= 1
+        else:
+            drift = self.detector.check(self.monitor)
+            if drift.fired:
+                plan = self._repartition()
+                repartitioned = True
+                moved = plan.moved_bytes
+                deferred = len(plan.deferred)
+                makespan = schedule_migration(
+                    plan, self.pcfg.num_sites,
+                    self.cfg.link_bytes_per_sec)
+                self._cooldown = self.cfg.cooldown_epochs
+        report = EpochReport(self.epoch, self._epoch_queries,
+                             self._epoch_comm, self._epoch_rt, drift,
+                             repartitioned, moved, deferred, makespan)
+        self.epochs.append(report)
+        self.epoch += 1
+        self._epoch_queries = 0
+        self._epoch_comm = 0
+        self._epoch_rt = 0.0
+        return report
+
+    # ------------------------------------------------------------------
+    def _repartition(self) -> MigrationPlan:
+        res: RefragmentResult = refragment(
+            self.graph, self.monitor, self.pcfg, self.selected_patterns)
+        aff = fragment_affinity(res.frag, res.sel_usage, res.weights)
+        plan = plan_migration(self.frag, self.alloc, res.frag,
+                              res.desired_alloc, aff,
+                              self.cfg.migration_budget_bytes,
+                              self.cfg.bytes_per_edge)
+        realized = Allocation(plan.final_site_of, self.pcfg.num_sites)
+        dictionary = DataDictionary.build(self.graph, res.frag, realized,
+                                          self.pcfg.num_sites)
+        self.frag = res.frag
+        self.alloc = realized
+        self.selected_patterns = res.selected_patterns
+        self.cold_props = res.cold_props
+        self.engine = DistributedEngine(self.graph, res.frag, realized,
+                                        dictionary, res.cold_props,
+                                        self.cost)
+        self._install_hook()
+        self.detector.set_reference(self.monitor, self.selected_patterns)
+        self.total_moved_bytes += plan.moved_bytes
+        self.num_repartitions += 1
+        return plan

@@ -1,0 +1,145 @@
+"""Incremental re-mining + re-selection, warm-started from the current
+FAP set.
+
+The heavy lifting of §4-§6 is reused verbatim (``core.mining``,
+``core.selection``, ``core.fragmentation``, ``core.allocation``); what
+makes this *incremental* rather than from-scratch is the input and the
+seeds:
+
+* mining runs over the monitor's bounded deduped shape table (a few
+  hundred shapes with decayed multiplicities), never over the raw query
+  log -- the monitor already did the workload compression that makes the
+  offline pipeline tractable, continuously;
+* the incumbent selected patterns are injected as candidates with their
+  support recomputed on the live distribution, so Algorithm 1 can retain
+  them without pattern growth having to rediscover them, and an
+  incumbent's fragment that survives selection is a zero-byte migration
+  (it is already materialized on some site);
+* hot/cold property classification (Def. 5) comes from the monitor's
+  decayed incidence masses, and minterm predicate mining (§5.2) from its
+  raw-query reservoir.
+
+The returned allocation is the *desired* placement; the migration
+planner (``online.migration``) decides how much of it to realize within
+the byte budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Sequence, Set
+
+import numpy as np
+
+from ..core.allocation import Allocation, allocate_fragments
+from ..core.fragmentation import (Fragmentation, horizontal_fragmentation,
+                                  vertical_fragmentation)
+from ..core.graph import RDFGraph
+from ..core.matching import _PropIndex, match_edge_ids
+from ..core.mining import (FrequentPattern, mine_frequent_patterns_deduped,
+                           usage_matrix)
+from ..core.pipeline import PartitionConfig
+from ..core.query import QueryGraph, is_subgraph_of
+from ..core.selection import select_patterns
+from .monitor import WorkloadMonitor
+
+
+@dataclasses.dataclass
+class RefragmentResult:
+    frag: Fragmentation
+    desired_alloc: Allocation        # pre-migration-budget placement
+    selected_patterns: List[QueryGraph]
+    cold_props: Set[int]
+    sel_usage: np.ndarray            # usage matrix over selected patterns
+    weights: np.ndarray              # snapshot multiplicities
+    num_mined: int
+    num_incumbents_kept: int
+    elapsed_sec: float
+
+
+def warm_mine(uniq: Sequence[QueryGraph], weights: np.ndarray, min_sup: int,
+              max_edges: int, incumbents: Sequence[QueryGraph]
+              ) -> List[FrequentPattern]:
+    """Mine the live snapshot, then merge incumbent patterns (support
+    recomputed live) so selection sees them even when decayed support
+    dips below minSup -- incumbents are already materialized, so keeping
+    a borderline one is free while dropping it costs a migration."""
+    fps = mine_frequent_patterns_deduped(uniq, weights, min_sup, max_edges)
+    have = {fp.pattern.canonical_code() for fp in fps}
+    for pat in incumbents:
+        code = pat.canonical_code()
+        if code in have:
+            continue
+        sup_set = {qi for qi, q in enumerate(uniq) if is_subgraph_of(pat, q)}
+        sup = int(weights[sorted(sup_set)].sum()) if sup_set else 0
+        fps.append(FrequentPattern(pat, sup, sup_set))
+        have.add(code)
+    return fps
+
+
+def refragment(graph: RDFGraph, monitor: WorkloadMonitor,
+               config: PartitionConfig,
+               incumbent_patterns: Sequence[QueryGraph]) -> RefragmentResult:
+    """One re-partitioning pass over the monitor's live distribution."""
+    t0 = time.perf_counter()
+    cfg = config
+    uniq, weights = monitor.snapshot()
+    if not uniq:
+        raise ValueError("monitor has no observed queries to refragment on")
+    total = int(weights.sum())
+    min_sup = max(int(total * cfg.min_sup_fraction), 1)
+
+    # --- mine (§4), warm-started ---
+    fps = warm_mine(uniq, weights, min_sup, cfg.max_pattern_edges,
+                    incumbent_patterns)
+
+    # --- live hot/cold split (Def. 5 on decayed incidence) ---
+    fprops = monitor.hot_properties(cfg.theta_fraction)
+    have = {fp.pattern.canonical_code() for fp in fps if fp.num_edges == 1}
+    for prop in fprops:
+        pat = QueryGraph.make([(-1, -2, prop)])
+        if pat.canonical_code() not in have:
+            sup = sum(int(w) for q, w in zip(uniq, weights)
+                      if prop in q.properties())
+            fps.append(FrequentPattern(pat, sup, set()))
+    cold_props = set(range(graph.num_properties)) - set(fprops)
+
+    # --- select (§4.1) ---
+    patterns = [fp.pattern for fp in fps]
+    U = usage_matrix(patterns, uniq)
+    idx = _PropIndex(graph)
+    frag_sizes = np.array(
+        [len(match_edge_ids(graph, p, index=idx, max_rows=cfg.max_rows))
+         for p in patterns], dtype=np.int64)
+    hot_ids, cold_ids = graph.hot_cold_split(fprops)
+    sc = max(int(len(hot_ids) * cfg.storage_factor),
+             int(frag_sizes[[i for i, fp in enumerate(fps)
+                             if fp.num_edges == 1]].sum()) + 1)
+    sel = select_patterns(fps, U, weights, frag_sizes, sc, fprops)
+    selected = [patterns[i] for i in sel.selected]
+    sel_U = U[:, sel.selected]
+    kept = sum(1 for p in selected
+               if p.canonical_code() in {q.canonical_code()
+                                         for q in incumbent_patterns})
+
+    # --- fragment (§5) on the live hot/cold split ---
+    if cfg.kind == "vertical":
+        frag = vertical_fragmentation(graph, selected, cold_ids,
+                                      cfg.num_cold_parts, index=idx,
+                                      max_rows=cfg.max_rows)
+    elif cfg.kind == "horizontal":
+        frag = horizontal_fragmentation(
+            graph, selected, monitor.raw_sample(), cold_ids,
+            cfg.num_cold_parts, cfg.per_pattern_predicates, index=idx,
+            max_rows=cfg.max_rows)
+    else:
+        raise ValueError(f"unknown fragmentation kind: {cfg.kind}")
+
+    # --- allocate (§6): desired placement, pre-budget; the data
+    # dictionary is built by the caller against the *realized*
+    # (post-migration-budget) placement ---
+    alloc = allocate_fragments(frag, sel_U, weights, cfg.num_sites,
+                               cfg.balance_factor)
+    return RefragmentResult(frag, alloc, selected, cold_props,
+                            sel_U, weights, len(fps), kept,
+                            time.perf_counter() - t0)

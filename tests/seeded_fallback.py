@@ -1,0 +1,71 @@
+"""Seeded-random stand-in for hypothesis when it is not installed.
+
+Implements the tiny subset of the hypothesis API these tests use
+(``given``, ``settings``, ``strategies.integers/permutations/composite``)
+on top of deterministic numpy generators: each ``@given`` test runs
+``max_examples`` seeded draws, so the property tests keep real coverage
+(just without shrinking) instead of being skipped.
+
+Usage in test modules:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from seeded_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, sample: Callable[[np.random.Generator], Any]):
+        self.sample = sample
+
+
+class _Strategies:
+    @staticmethod
+    def integers(lo: int, hi: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+    @staticmethod
+    def permutations(items: List[Any]) -> _Strategy:
+        return _Strategy(
+            lambda rng: [items[i] for i in rng.permutation(len(items))])
+
+    @staticmethod
+    def composite(fn: Callable) -> Callable[..., _Strategy]:
+        def make(*args: Any, **kw: Any) -> _Strategy:
+            def sample(rng: np.random.Generator) -> Any:
+                return fn(lambda strat: strat.sample(rng), *args, **kw)
+            return _Strategy(sample)
+        return make
+
+
+st = _Strategies()
+
+
+def given(*strategies: _Strategy) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        # NOTE: no functools.wraps -- copying __wrapped__ would make
+        # pytest introspect the original signature and demand fixtures
+        # for the strategy-bound parameters.
+        def runner() -> None:
+            for case in range(runner._max_examples):
+                rng = np.random.default_rng(1_000_003 * (case + 1))
+                fn(*[s.sample(rng) for s in strategies])
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner._max_examples = 20
+        return runner
+    return deco
+
+
+def settings(max_examples: int = 20, **_ignored: Any) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        if hasattr(fn, "_max_examples"):
+            fn._max_examples = max_examples
+        return fn
+    return deco

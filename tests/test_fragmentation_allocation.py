@@ -1,8 +1,13 @@
 """Fragmentation (Def. 3/10/12) and allocation (Def. 4/13, Alg. 2)
-invariants, including hypothesis property tests."""
+invariants, including property tests (hypothesis when available,
+seeded-random equivalents otherwise)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # property tests degrade to seeded random
+    from seeded_fallback import given, settings, st
 
 from repro.core import (Allocation, affinity_matrix, allocate,
                         allocate_experts, allocate_fragments,

@@ -3,7 +3,10 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from seeded_fallback import given, settings, st
 
 from repro.core.graph import RDFGraph, example_graph
 from repro.core.matching import (count_matches, match_edge_ids, match_pattern)

@@ -1,0 +1,219 @@
+"""Online adaptive subsystem: monitor decay/sketch, drift detection,
+cost-bounded migration planning, and the AdaptiveEngine epoch loop."""
+import numpy as np
+import pytest
+
+from repro.core import (PartitionConfig, QueryGraph, WorkloadPartitioner,
+                        generate_drifting_workload, generate_watdiv)
+from repro.core.allocation import Allocation, fragment_affinity
+from repro.online import (AdaptiveConfig, AdaptiveEngine, DriftDetector,
+                          WorkloadMonitor, migration_work_items,
+                          plan_migration, refragment)
+
+
+def V(i):
+    return -(i + 1)
+
+
+# ----------------------------------------------------------------------
+# Monitor
+# ----------------------------------------------------------------------
+
+def test_monitor_decay_prefers_recent_shapes():
+    mon = WorkloadMonitor(num_properties=4, decay=0.9, capacity=16)
+    old = QueryGraph.make([(V(0), V(1), 0)])
+    new = QueryGraph.make([(V(0), V(1), 1)])
+    for _ in range(50):
+        mon.observe(old)
+    for _ in range(50):
+        mon.observe(new)
+    uniq, w = mon.snapshot()
+    by_prop = {q.properties()[0]: int(wi) for q, wi in zip(uniq, w)}
+    # equal raw counts, but the recent shape must dominate after decay
+    assert by_prop[1] > by_prop[0]
+
+
+def test_monitor_bounded_capacity_and_renormalize():
+    mon = WorkloadMonitor(num_properties=64, decay=0.99, capacity=8)
+    rng = np.random.default_rng(0)
+    for _ in range(3000):
+        p = int(rng.integers(0, 64))
+        mon.observe(QueryGraph.make([(V(0), V(1), p)]))
+    assert len(mon.shapes) <= 8
+    dist = mon.property_distribution()
+    assert np.isfinite(dist).all()
+    assert abs(dist.sum() - 1.0) < 1e-9
+
+
+def test_monitor_evict_readmit_cycles_keep_mass_linear():
+    # rotating through more shapes than capacity must not compound mass
+    # (evict spills only residently-earned mass; the sketch keeps the
+    # rest) -- regression for exponential inflation / int64 overflow
+    mon = WorkloadMonitor(num_properties=8, decay=1.0, capacity=2)
+    shapes = [QueryGraph.make([(V(0), V(1), p)]) for p in range(3)]
+    for _ in range(140):
+        for q in shapes:
+            mon.observe(q)
+    uniq, w = mon.snapshot()
+    assert int(w.sum()) <= 3 * 140 * 2     # CM overestimates are bounded
+    assert int(w.max()) >= 100             # ...but history is not lost
+
+
+def test_monitor_hot_properties_tracks_mass():
+    mon = WorkloadMonitor(num_properties=8, decay=1.0, capacity=32)
+    for _ in range(99):
+        mon.observe(QueryGraph.make([(V(0), V(1), 2)]))
+    mon.observe(QueryGraph.make([(V(0), V(1), 5)]))
+    hot = mon.hot_properties(theta_fraction=0.05)
+    assert 2 in hot and 5 not in hot
+
+
+# ----------------------------------------------------------------------
+# Drift detection
+# ----------------------------------------------------------------------
+
+def _fill(mon, prop, n):
+    for _ in range(n):
+        mon.observe(QueryGraph.make([(V(0), V(1), prop)]))
+
+
+def test_drift_silent_on_stationary_stream():
+    mon = WorkloadMonitor(num_properties=4, decay=0.99, capacity=32)
+    _fill(mon, 0, 100)
+    det = DriftDetector(tv_threshold=0.15, min_effective_weight=10.0)
+    det.set_reference(mon, [QueryGraph.make([(V(0), V(1), 0)])])
+    _fill(mon, 0, 200)           # same distribution keeps flowing
+    rep = det.check(mon)
+    assert not rep.fired
+    assert rep.tv_distance < 0.05
+
+
+def test_drift_fires_on_distribution_shift():
+    mon = WorkloadMonitor(num_properties=4, decay=0.99, capacity=32)
+    _fill(mon, 0, 100)
+    det = DriftDetector(tv_threshold=0.15, min_effective_weight=10.0)
+    det.set_reference(mon, [QueryGraph.make([(V(0), V(1), 0)])])
+    _fill(mon, 3, 300)           # mass shifts to a different property
+    rep = det.check(mon)
+    assert rep.fired and "tv" in rep.reason
+    assert rep.tv_distance > 0.15
+
+
+def test_drift_warmup_gates_firing():
+    mon = WorkloadMonitor(num_properties=4, decay=0.99, capacity=32)
+    _fill(mon, 0, 5)
+    det = DriftDetector(tv_threshold=0.15, min_effective_weight=1e9)
+    det.set_reference(mon, [QueryGraph.make([(V(0), V(1), 0)])])
+    _fill(mon, 3, 5)
+    assert not det.check(mon).fired
+
+
+# ----------------------------------------------------------------------
+# Migration planning
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def refrag_setup():
+    g = generate_watdiv(6000, seed=3)
+    wl = generate_drifting_workload(g, [(500, {})], seed=5)
+    cfg = PartitionConfig(kind="vertical", num_sites=4)
+    pp = WorkloadPartitioner(g, wl, cfg).run()
+    mon = WorkloadMonitor(g.num_properties, decay=0.995, capacity=256)
+    mon.bulk_load(wl)
+    for q in generate_drifting_workload(g, [(400, {"S": 12.0})],
+                                        seed=9).queries:
+        mon.observe(q)
+    res = refragment(g, mon, cfg, pp.selected_patterns)
+    return g, cfg, pp, res
+
+
+def test_migration_respects_budget_and_strands_nothing(refrag_setup):
+    g, cfg, pp, res = refrag_setup
+    aff = fragment_affinity(res.frag, res.sel_usage, res.weights)
+    n = len(res.frag.fragments)
+    for budget in [0, 10_000, 10**9]:
+        plan = plan_migration(pp.frag, pp.alloc, res.frag,
+                              res.desired_alloc, aff, budget)
+        # every fragment owned by exactly one valid site (Def. 3/4)
+        assert plan.strands_none(n, cfg.num_sites)
+        mandatory = sum(m.nbytes for m in plan.applied if m.mandatory)
+        # budget bounds optional relocations on top of the mandatory set
+        assert plan.moved_bytes <= max(budget, mandatory)
+        realized = Allocation(plan.final_site_of, cfg.num_sites)
+        assert realized.is_partition(n)
+
+
+def test_migration_zero_budget_defers_all_optional(refrag_setup):
+    g, cfg, pp, res = refrag_setup
+    aff = fragment_affinity(res.frag, res.sel_usage, res.weights)
+    plan = plan_migration(pp.frag, pp.alloc, res.frag, res.desired_alloc,
+                          aff, budget_bytes=0)
+    assert all(m.mandatory for m in plan.applied)
+    # deferred fragments stay at their old (resident) site
+    old_site = {}
+    from repro.online import fragment_key
+    for fi, f in enumerate(pp.frag.fragments):
+        old_site.setdefault(fragment_key(pp.frag, f),
+                            int(pp.alloc.site_of[fi]))
+    for mv in plan.deferred:
+        key = fragment_key(res.frag, res.frag.fragments[mv.frag_idx])
+        assert plan.final_site_of[mv.frag_idx] == old_site[key]
+
+
+def test_migration_unbounded_budget_realizes_desired(refrag_setup):
+    g, cfg, pp, res = refrag_setup
+    aff = fragment_affinity(res.frag, res.sel_usage, res.weights)
+    plan = plan_migration(pp.frag, pp.alloc, res.frag, res.desired_alloc,
+                          aff, budget_bytes=10**12)
+    # only moves with a positive affinity gain (or mandatory) execute;
+    # everything else is already in place or not worth shipping
+    for mv in plan.deferred:
+        assert mv.gain <= 0.0
+    items = migration_work_items(plan)
+    assert len(items) == len(plan.applied)
+    assert all(it.est_cost >= 0.0 for it in items)
+
+
+def test_refragment_warm_start_keeps_incumbents(refrag_setup):
+    g, cfg, pp, res = refrag_setup
+    # the 1-edge integrity seed of the incumbent set stays hot (uniform
+    # phase properties are still flowing), so warm start must retain
+    # incumbent patterns rather than rebuild from nothing
+    assert res.num_incumbents_kept >= 1
+    assert res.frag.coverage_ok(g)
+
+
+# ----------------------------------------------------------------------
+# AdaptiveEngine epoch loop
+# ----------------------------------------------------------------------
+
+def test_adaptive_engine_static_stream_never_repartitions(watdiv_small):
+    g = watdiv_small
+    wl = generate_drifting_workload(g, [(400, {})], seed=11)
+    pp = WorkloadPartitioner(
+        g, wl, PartitionConfig(kind="vertical", num_sites=4)).run()
+    eng = AdaptiveEngine(pp, AdaptiveConfig(epoch_len=100))
+    for q in generate_drifting_workload(g, [(300, {})], seed=13).queries:
+        eng.execute(q)
+    assert eng.num_repartitions == 0
+    assert eng.total_moved_bytes == 0
+
+
+def test_adaptive_engine_adapts_and_stays_in_budget(watdiv_small):
+    g = watdiv_small
+    wl = generate_drifting_workload(g, [(400, {})], seed=11)
+    budget = 2_000_000
+    pp = WorkloadPartitioner(
+        g, wl, PartitionConfig(kind="vertical", num_sites=4)).run()
+    eng = AdaptiveEngine(pp, AdaptiveConfig(
+        epoch_len=100, migration_budget_bytes=budget))
+    stream = generate_drifting_workload(
+        g, [(100, {}), (400, {"S": 12.0})], seed=23)
+    for q in stream.queries:
+        eng.execute(q)
+    assert eng.num_repartitions >= 1
+    per_epoch = [ep.moved_bytes for ep in eng.epochs]
+    assert max(per_epoch) <= budget
+    # the realized allocation is still a valid partition
+    assert eng.alloc.is_partition(len(eng.frag.fragments))
+    assert eng.frag.coverage_ok(g)

@@ -1,7 +1,10 @@
 """Query-graph layer: canonical DFS codes, normalization, subgraph iso."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from seeded_fallback import given, settings, st
 
 from repro.core.query import (QueryGraph, all_embeddings, find_embedding,
                               is_subgraph_of, min_dfs_code)
@@ -45,12 +48,20 @@ def small_graphs(draw):
     n_edges = draw(st.integers(1, 5))
     n_vars = draw(st.integers(1, 4))
     edges = []
+    used = []
     for i in range(n_edges):
-        s = draw(st.integers(0, n_vars - 1))
-        d = draw(st.integers(0, n_vars - 1))
+        # connect: anchor every edge i at a vertex of edges 0..i-1
+        # (min_dfs_code requires a connected query graph)
+        if used:
+            s = used[draw(st.integers(0, len(used) - 1))]
+        else:
+            s = V(draw(st.integers(0, n_vars - 1)))
+        d = V(draw(st.integers(0, n_vars - 1)))
         p = draw(st.integers(0, 3))
-        edges.append((V(s), V(d), p))
-    # connect: chain every edge i to share a vertex with edge 0..i-1
+        edges.append((s, d, p))
+        for v in (s, d):
+            if v not in used:
+                used.append(v)
     return QueryGraph.make(edges)
 
 

@@ -1,7 +1,10 @@
 """Algorithm 1 (frequent access pattern selection) invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from seeded_fallback import given, settings, st
 
 from repro.core.mining import FrequentPattern
 from repro.core.query import QueryGraph

@@ -1,0 +1,92 @@
+"""Hot paths the migration planner leans on: affinity symmetry
+(core/allocation.py) and work-stealing with a deterministic cost
+callback (distributed/straggler.py)."""
+import numpy as np
+import pytest
+
+from repro.core.allocation import affinity_matrix, fragment_affinity
+from repro.core.mining import usage_matrix
+from repro.distributed import StragglerMitigator, WorkItem, WorkQueue
+
+
+# ----------------------------------------------------------------------
+# Affinity symmetry: aff(F, F') == aff(F', F)  (Def. 13)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(5))
+def test_affinity_matrix_symmetric_random(seed):
+    rng = np.random.default_rng(seed)
+    U = rng.integers(0, 2, size=(30, 12)).astype(np.int8)
+    w = rng.integers(1, 9, size=30).astype(np.int64)
+    A = affinity_matrix(U, w)
+    assert np.allclose(A, A.T)
+    assert (A >= 0).all()
+
+
+def test_fragment_affinity_symmetric_both_kinds(partitioner_v,
+                                                partitioner_h,
+                                                workload_small):
+    uniq, w = workload_small.dedup_normalized()
+    for pp in (partitioner_v, partitioner_h):
+        U = usage_matrix(pp.frag.patterns, uniq)
+        A = fragment_affinity(pp.frag, U, w)
+        assert A.shape == (len(pp.frag.fragments), len(pp.frag.fragments))
+        assert np.allclose(A, A.T)
+        assert np.allclose(np.diag(A), 0.0)
+
+
+# ----------------------------------------------------------------------
+# Work stealing with a deterministic cost callback
+# ----------------------------------------------------------------------
+
+def _items(costs):
+    return [WorkItem(i, i % 2, c) for i, c in enumerate(costs)]
+
+
+def test_cost_callback_overrides_est_cost():
+    # callback charges a flat 2s regardless of est_cost or site speed
+    wq = WorkQueue(2, steal=False, site_speed=[1.0, 0.1],
+                   cost_fn=lambda item, site: 2.0)
+    wq.submit(_items([5.0, 7.0, 11.0, 13.0]))
+    makespan, done = wq.run()
+    assert makespan == pytest.approx(4.0)      # 2 items x 2s per site
+    assert all(d.finish - d.start == pytest.approx(2.0) for d in done)
+
+
+def test_work_stealing_deterministic_and_complete():
+    # site 1 is 4x slower via the callback; stealing must offload it
+    def cost(item, site):
+        return item.est_cost * (4.0 if site == 1 else 1.0)
+
+    costs = [1.0] * 8
+    base = WorkQueue(2, steal=False, cost_fn=cost)
+    base.submit(_items(costs))
+    t_base, done_base = base.run()
+
+    steal = WorkQueue(2, steal=True, cost_fn=cost)
+    steal.submit(_items(costs))
+    t_steal, done_steal = steal.run()
+
+    assert t_steal < t_base
+    # every item completes exactly once under both policies
+    assert sorted(d.item_id for d in done_base) == list(range(8))
+    assert sorted(d.item_id for d in done_steal) == list(range(8))
+    # deterministic: identical reruns give identical schedules
+    again = WorkQueue(2, steal=True, cost_fn=cost)
+    again.submit(_items(costs))
+    t2, done2 = again.run()
+    assert t2 == t_steal
+    assert [(d.item_id, d.site, d.start) for d in done2] == \
+           [(d.item_id, d.site, d.start) for d in done_steal]
+
+
+def test_straggler_mitigator_simulation_improves_makespan():
+    t_base, t_mit = StragglerMitigator().simulate(
+        costs=[1.0] * 12, num_sites=3, slow_site=0, slow_factor=5.0)
+    assert t_mit < t_base
+
+
+def test_backup_planning_flags_overruns():
+    m = StragglerMitigator(backup_factor=2.0)
+    inflight = {1: 0.0, 2: 9.0}
+    assert m.plan_backups(inflight, now=10.0, median_cost=3.0) == [1]
