@@ -16,9 +16,9 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.core import (PartitionConfig, QueryGraph, WorkloadPartitioner,
+from repro.core import (PartitionConfig, QueryGraph, Session, build_plan,
                         generate_drifting_workload, generate_watdiv)
-from repro.online import AdaptiveConfig, AdaptiveEngine
+from repro.online import AdaptiveConfig
 
 from .paper_benches import emit
 
@@ -26,7 +26,7 @@ MIGRATION_BUDGET = 4_000_000
 
 
 def _replay(engine, queries: List[QueryGraph]) -> List[int]:
-    return [engine.execute(q).stats.comm_bytes for q in queries]
+    return [r.stats.comm_bytes for r in engine.execute_many(queries)]
 
 
 def bench_adaptive() -> None:
@@ -42,11 +42,13 @@ def bench_adaptive() -> None:
         g, [(drift_point, {}), (700, {"S": 12.0}), (700, {"L": 12.0})],
         seed=23)
 
-    static = WorkloadPartitioner(g, wl_build, cfg).run().engine()
-    adaptive = AdaptiveEngine(
-        WorkloadPartitioner(g, wl_build, cfg).run(),
-        AdaptiveConfig(epoch_len=150,
-                       migration_budget_bytes=MIGRATION_BUDGET))
+    # ONE offline phase; static and adaptive sessions share the plan
+    plan = build_plan(g, wl_build, cfg)
+    static = Session(plan, backend="local")
+    adaptive = Session(plan, backend="adaptive", adaptive_config=
+                       AdaptiveConfig(epoch_len=150,
+                                      migration_budget_bytes=MIGRATION_BUDGET)
+                       ).engine
 
     comm_static = _replay(static, stream.queries)
     comm_adaptive = _replay(adaptive, stream.queries)
@@ -71,10 +73,10 @@ def bench_adaptive() -> None:
 
     # stationary control: same distribution as build -> no re-partitions
     calm = generate_drifting_workload(g, [(900, {})], seed=31)
-    control = AdaptiveEngine(
-        WorkloadPartitioner(g, wl_build, cfg).run(),
-        AdaptiveConfig(epoch_len=150,
-                       migration_budget_bytes=MIGRATION_BUDGET))
+    control = Session(plan, backend="adaptive", adaptive_config=
+                      AdaptiveConfig(epoch_len=150,
+                                     migration_budget_bytes=MIGRATION_BUDGET)
+                      ).engine
     _replay(control, calm.queries)
     emit("bench_adaptive", "stationary", "repartitions",
          control.num_repartitions)

@@ -11,13 +11,16 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core import (BaselineEngine, PartitionConfig, WorkloadPartitioner,
+from repro.core import (BACKENDS, PartitionConfig, Session, build_plan,
                         generate_watdiv, generate_workload,
-                        shape_fragmentation, simulate_throughput,
-                        warp_fragmentation)
+                        simulate_throughput)
+from repro.core.matching import match_pattern
 from repro.core.workload import TEMPLATE_CLASS
 
 ROWS: List[Tuple[str, str, str, float]] = []
+
+STRATEGY_OF = {"VF": "vertical", "HF": "horizontal",
+               "SHAPE": "shape", "WARP": "warp"}
 
 
 def emit(bench: str, variant: str, metric: str, value: float) -> None:
@@ -31,20 +34,20 @@ def _setup(n_triples=30_000, n_queries=2_000, sites=10, seed=1):
     return g, wl
 
 
+def _plans(g, wl, sites=10):
+    return {name: build_plan(g, wl, PartitionConfig(kind=kind,
+                                                    num_sites=sites))
+            for name, kind in STRATEGY_OF.items()}
+
+
 def _engines(g, wl, sites=10):
-    vf = WorkloadPartitioner(g, wl, PartitionConfig(
-        kind="vertical", num_sites=sites)).run()
-    hf = WorkloadPartitioner(g, wl, PartitionConfig(
-        kind="horizontal", num_sites=sites)).run()
-    shape = shape_fragmentation(g, sites)
-    warp, _ = warp_fragmentation(g, sites, vf.selected_patterns)
-    return {
-        "VF": (vf.engine(), vf),
-        "HF": (hf.engine(), hf),
-        "SHAPE": (BaselineEngine(g, shape), shape),
-        "WARP": (BaselineEngine(g, warp,
-                                local_patterns=vf.selected_patterns), warp),
-    }
+    """name -> (Session, plan): workload-driven plans run on the exact
+    local backend, hash/min-cut baselines on the gather-all backend."""
+    out = {}
+    for name, plan in _plans(g, wl, sites).items():
+        backend = "local" if plan.frag is not None else "baseline"
+        out[name] = (Session(plan, backend=backend), plan)
+    return out
 
 
 # ----------------------------------------------------------------------
@@ -54,10 +57,11 @@ def _engines(g, wl, sites=10):
 def bench_minsup() -> None:
     g, wl = _setup()
     for frac in [0.0005, 0.001, 0.005, 0.01, 0.05]:
-        pp = WorkloadPartitioner(g, wl, PartitionConfig(
-            min_sup_fraction=frac, num_sites=10)).run()
-        emit("fig8_minsup", f"{frac:g}", "num_faps", pp.stats.num_patterns_mined)
-        emit("fig8_minsup", f"{frac:g}", "hit_rate", pp.stats.hit_rate)
+        plan = build_plan(g, wl, PartitionConfig(
+            min_sup_fraction=frac, num_sites=10))
+        emit("fig8_minsup", f"{frac:g}", "num_faps",
+             plan.stats.num_patterns_mined)
+        emit("fig8_minsup", f"{frac:g}", "hit_rate", plan.stats.hit_rate)
 
 
 # ----------------------------------------------------------------------
@@ -91,9 +95,8 @@ def bench_response() -> None:
 def bench_scalability() -> None:
     for n in [10_000, 20_000, 40_000, 80_000]:
         g, wl = _setup(n_triples=n, n_queries=800, seed=3)
-        pp = WorkloadPartitioner(g, wl, PartitionConfig(
-            kind="vertical", num_sites=10)).run()
-        eng = pp.engine()
+        eng = Session(build_plan(g, wl, PartitionConfig(
+            kind="vertical", num_sites=10)))
         sample = wl.queries[:80]
         thr, _ = simulate_throughput(eng, sample)
         rts = [eng.execute(q).stats.response_time for q in sample]
@@ -108,13 +111,8 @@ def bench_scalability() -> None:
 
 def bench_redundancy() -> None:
     g, wl = _setup()
-    engines = _engines(g, wl)
-    for name, (_, obj) in engines.items():
-        if name in ("VF", "HF"):
-            r = obj.frag.redundancy_ratio(g)
-        else:
-            r = obj.redundancy_ratio(g)
-        emit("table1_redundancy", name, "ratio", r)
+    for name, plan in _plans(g, wl).items():
+        emit("table1_redundancy", name, "ratio", plan.redundancy_ratio())
 
 
 # ----------------------------------------------------------------------
@@ -125,23 +123,19 @@ def bench_offline() -> None:
     g, wl = _setup()
     for kind in ["vertical", "horizontal"]:
         t0 = time.perf_counter()
-        pp = WorkloadPartitioner(g, wl, PartitionConfig(
-            kind=kind, num_sites=10)).run()
+        plan = build_plan(g, wl, PartitionConfig(kind=kind, num_sites=10))
         total = time.perf_counter() - t0
-        s = pp.stats
+        s = plan.stats
         name = "VF" if kind == "vertical" else "HF"
         emit("table2_offline", name, "mine_sec", s.mine_sec)
         emit("table2_offline", name, "select_sec", s.select_sec)
         emit("table2_offline", name, "fragment_sec", s.fragment_sec)
         emit("table2_offline", name, "allocate_sec", s.allocate_sec)
         emit("table2_offline", name, "total_sec", total)
-    t0 = time.perf_counter()
-    shape_fragmentation(g, 10)
-    emit("table2_offline", "SHAPE", "total_sec", time.perf_counter() - t0)
-    pp = WorkloadPartitioner(g, wl, PartitionConfig(num_sites=10)).run()
-    t0 = time.perf_counter()
-    warp_fragmentation(g, 10, pp.selected_patterns)
-    emit("table2_offline", "WARP", "total_sec", time.perf_counter() - t0)
+    for name, kind in [("SHAPE", "shape"), ("WARP", "warp")]:
+        t0 = time.perf_counter()
+        build_plan(g, wl, PartitionConfig(kind=kind, num_sites=10))
+        emit("table2_offline", name, "total_sec", time.perf_counter() - t0)
 
 
 # ----------------------------------------------------------------------
@@ -165,5 +159,31 @@ def bench_queries() -> None:
                  float(np.mean(rts)))
 
 
+# ----------------------------------------------------------------------
+# Engine parity: the same plan + query set through every Session backend
+# must produce identical answer counts (and match direct matching on the
+# whole graph).  This is the CI smoke bench (`benchmarks.run --smoke`):
+# a regression in any backend's execution path surfaces as mismatches>0.
+# ----------------------------------------------------------------------
+
+def bench_engine_parity() -> None:
+    g = generate_watdiv(5_000, seed=2)
+    wl = generate_workload(g, 400, seed=3)
+    plan = build_plan(g, wl, PartitionConfig(kind="vertical", num_sites=4))
+    sample = wl.queries[:16]
+    want = [match_pattern(g, q).num_rows for q in sample]
+    for backend in BACKENDS:
+        t0 = time.perf_counter()
+        sess = Session(plan, backend=backend, spmd_capacity=65536)
+        rows = [r.num_rows for r in sess.execute_many(sample, batch_size=8)]
+        dt = time.perf_counter() - t0
+        emit("engine_parity", backend, "mismatches",
+             sum(a != b for a, b in zip(rows, want)))
+        emit("engine_parity", backend, "wall_sec", dt)
+        emit("engine_parity", backend, "rows", sum(rows))
+
+
 ALL = [bench_minsup, bench_throughput, bench_response, bench_scalability,
-       bench_redundancy, bench_offline, bench_queries]
+       bench_redundancy, bench_offline, bench_queries, bench_engine_parity]
+
+SMOKE = [bench_engine_parity]

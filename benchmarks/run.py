@@ -5,6 +5,7 @@ drift benchmark + the roofline report from the dry-run artifacts.
   PYTHONPATH=src python -m benchmarks.run --only fig9     # substring match
   PYTHONPATH=src python -m benchmarks.run --json reports/BENCH_pr1.json
   PYTHONPATH=src python -m benchmarks.run --roofline-dir reports/dryrun_baseline
+  PYTHONPATH=src python -m benchmarks.run --smoke         # CI quick subset
 
 Output: CSV rows ``bench,variant,metric,value``; with ``--json PATH`` the
 same rows are also written as a machine-readable BENCH_*.json so the
@@ -27,13 +28,22 @@ def main() -> None:
                     help="also write results as a BENCH_*.json file")
     ap.add_argument("--roofline-dir", default="reports/dryrun_baseline")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick CI subset (engine-parity regression bench); "
+                         "implies --skip-roofline")
     args = ap.parse_args()
 
     from . import adaptive, paper_benches
     from .roofline import bench_roofline
 
+    if args.smoke:
+        args.skip_roofline = True
+        benches = list(paper_benches.SMOKE)
+    else:
+        benches = list(paper_benches.ALL) + list(adaptive.ALL)
+
     timings = {}
-    for fn in list(paper_benches.ALL) + list(adaptive.ALL):
+    for fn in benches:
         name = fn.__name__
         if args.only and args.only not in name:
             continue

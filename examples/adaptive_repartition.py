@@ -12,9 +12,9 @@ printing the epoch ledger as it goes.
 """
 import numpy as np
 
-from repro.core import (PartitionConfig, WorkloadPartitioner,
+from repro.core import (PartitionConfig, Session, build_plan,
                         generate_drifting_workload, generate_watdiv)
-from repro.online import AdaptiveConfig, AdaptiveEngine
+from repro.online import AdaptiveConfig
 
 
 def main() -> None:
@@ -23,24 +23,26 @@ def main() -> None:
     wl_build = generate_drifting_workload(g, [(800, {})], seed=11)
     cfg = PartitionConfig(kind="vertical", num_sites=6)
 
-    static = WorkloadPartitioner(g, wl_build, cfg).run().engine()
-    adaptive = AdaptiveEngine(
-        WorkloadPartitioner(g, wl_build, cfg).run(),
-        AdaptiveConfig(epoch_len=120, migration_budget_bytes=2_000_000))
+    # one offline phase; the frozen and adaptive sessions share the plan
+    plan = build_plan(g, wl_build, cfg)
+    static = Session(plan, backend="local")
+    adaptive = Session(plan, backend="adaptive",
+                       adaptive_config=AdaptiveConfig(
+                           epoch_len=120, migration_budget_bytes=2_000_000))
 
     print("== replay: 240 uniform queries, then 480 star-heavy ==")
     drift_point = 240
     stream = generate_drifting_workload(
         g, [(drift_point, {}), (480, {"S": 12.0})], seed=23)
 
-    comm_static = [static.execute(q).stats.comm_bytes
-                   for q in stream.queries]
-    comm_adaptive = [adaptive.execute(q).stats.comm_bytes
-                     for q in stream.queries]
+    comm_static = [r.stats.comm_bytes
+                   for r in static.execute_many(stream.queries)]
+    comm_adaptive = [r.stats.comm_bytes
+                     for r in adaptive.execute_many(stream.queries)]
 
     print("\nepoch ledger (adaptive):")
     print("  ep  queries  comm_bytes  repartitioned  moved_bytes  drift")
-    for ep in adaptive.epochs:
+    for ep in adaptive.engine.epochs:
         d = ep.drift
         sig = ("-" if d is None else
                f"tv={d.tv_distance:.3f} cov={d.coverage:.3f}"
@@ -53,9 +55,10 @@ def main() -> None:
     print(f"\nshipped bytes after drift point: static={after_s:,}  "
           f"adaptive={after_a:,}  "
           f"({(1 - after_a / max(after_s, 1)) * 100:.1f}% less)")
-    print(f"re-partitions: {adaptive.num_repartitions}, "
-          f"migrated bytes: {adaptive.total_moved_bytes:,} "
-          f"(budget {adaptive.cfg.migration_budget_bytes:,}/epoch)")
+    eng = adaptive.engine
+    print(f"re-partitions: {eng.num_repartitions}, "
+          f"migrated bytes: {eng.total_moved_bytes:,} "
+          f"(budget {eng.cfg.migration_budget_bytes:,}/epoch)")
 
 
 if __name__ == "__main__":

@@ -1,17 +1,19 @@
-"""Quickstart: the paper's full pipeline in ~40 lines.
+"""Quickstart: the paper's full pipeline through the public API.
 
-Generates a WatDiv-like RDF graph + query workload, mines and selects
-frequent access patterns (Algorithm 1), builds a vertical fragmentation
-(Def. 10), allocates fragments to sites (Algorithm 2), and answers
-queries through the distributed engine (Algorithms 3+4) -- verifying the
-answers against direct matching on the whole graph.
+Generates a WatDiv-like RDF graph + query workload, runs the offline
+phase (mine -> select -> fragment -> allocate, Algorithms 1+2) into a
+serializable ``PartitionPlan``, answers queries through a ``Session``
+(the one ``Engine`` protocol over every backend), round-trips the plan
+through disk, and verifies the answers against direct matching on the
+whole graph.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
+import tempfile
+from pathlib import Path
 
-from repro.core import (PartitionConfig, WorkloadPartitioner,
-                        generate_watdiv, generate_workload)
+from repro.core import PartitionConfig, PartitionPlan, Session, build_plan, \
+    generate_watdiv, generate_workload
 from repro.core.matching import match_pattern
 
 
@@ -22,27 +24,36 @@ def main() -> None:
     print(f"graph: {graph.num_edges} triples, {graph.num_vertices} vertices; "
           f"workload: {len(workload)} queries")
 
-    # 2) offline phase: mine -> select -> fragment -> allocate
-    pp = WorkloadPartitioner(
-        graph, workload,
-        PartitionConfig(kind="vertical", num_sites=10)).run()
-    s = pp.stats
+    # 2) offline phase -> a PartitionPlan (strategy picked by config.kind:
+    #    "vertical" | "horizontal" | "shape" | "warp")
+    plan = build_plan(graph, workload,
+                      PartitionConfig(kind="vertical", num_sites=10))
+    s = plan.stats
     print(f"mined {s.num_patterns_mined} frequent access patterns, "
           f"selected {s.num_patterns_selected} "
           f"(hit rate {s.hit_rate:.1%}, redundancy {s.redundancy_ratio:.2f})")
 
-    # 3) online phase: answer queries, verify against direct matching
-    engine = pp.engine()
-    ok = 0
-    for q in workload.queries[:50]:
-        r = engine.execute(q)
-        want = match_pattern(graph, q).num_rows
-        assert r.num_rows == want, "engine answer mismatch!"
-        ok += 1
-    print(f"answered {ok}/50 queries exactly; "
-          f"example stats: sites_touched="
-          f"{len(engine.execute(workload.queries[0]).stats.sites_touched)}, "
-          f"comm_bytes={engine.execute(workload.queries[0]).stats.comm_bytes}")
+    # 3) online phase: a Session serves the plan; backend is swappable
+    #    ("local" | "baseline" | "spmd" | "adaptive") behind one protocol
+    session = Session(plan, backend="local")
+    sample = workload.queries[:50]
+    want = [match_pattern(graph, q).num_rows for q in sample]
+    got = [r.num_rows for r in session.execute_many(sample, batch_size=16)]
+    assert got == want, "engine answer mismatch!"
+    st = session.stats()
+    print(f"answered {st.queries}/50 queries exactly on backend="
+          f"{st.backend!r} (rows={st.result_rows}, "
+          f"comm_bytes={st.comm_bytes})")
+
+    # 4) the plan is an artifact: save, load, serve -- no re-partitioning
+    with tempfile.TemporaryDirectory() as d:
+        path = plan.save(Path(d) / "plan_v1")
+        reloaded = PartitionPlan.load(path, graph)
+        assert reloaded == plan
+        again = Session(reloaded, backend="local")
+        assert [r.num_rows for r in again.execute_many(sample)] == want
+        print(f"plan round-tripped through {path.name}/ and served the "
+              f"same answers")
 
 
 if __name__ == "__main__":

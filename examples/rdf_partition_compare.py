@@ -6,10 +6,9 @@ laptop scale, including straggler mitigation for the subquery work queue.
 """
 import numpy as np
 
-from repro.core import (BaselineEngine, PartitionConfig, WorkloadPartitioner,
+from repro.core import (PartitionConfig, Session, build_plan,
                         generate_watdiv, generate_workload,
-                        shape_fragmentation, simulate_throughput,
-                        warp_fragmentation)
+                        simulate_throughput)
 from repro.distributed import StragglerMitigator
 
 
@@ -18,23 +17,17 @@ def main() -> None:
     wl = generate_workload(g, 1_500, seed=2)
     sites = 10
 
-    vf = WorkloadPartitioner(g, wl, PartitionConfig(
-        kind="vertical", num_sites=sites)).run()
-    hf = WorkloadPartitioner(g, wl, PartitionConfig(
-        kind="horizontal", num_sites=sites)).run()
-    shape = shape_fragmentation(g, sites)
-    warp, _ = warp_fragmentation(g, sites, vf.selected_patterns)
-
-    engines = {
-        "VF": vf.engine(),
-        "HF": hf.engine(),
-        "SHAPE": BaselineEngine(g, shape),
-        "WARP": BaselineEngine(g, warp, local_patterns=vf.selected_patterns),
-    }
-    reds = {"VF": vf.frag.redundancy_ratio(g),
-            "HF": hf.frag.redundancy_ratio(g),
-            "SHAPE": shape.redundancy_ratio(g),
-            "WARP": warp.redundancy_ratio(g)}
+    # one build_plan call per strategy; every plan is served through the
+    # same Session protocol (workload-driven plans on the exact local
+    # backend, hash/min-cut baselines on the gather-all backend)
+    plans = {name: build_plan(g, wl, PartitionConfig(kind=kind,
+                                                     num_sites=sites))
+             for name, kind in [("VF", "vertical"), ("HF", "horizontal"),
+                                ("SHAPE", "shape"), ("WARP", "warp")]}
+    engines = {name: Session(p, backend=("local" if p.frag is not None
+                                         else "baseline"))
+               for name, p in plans.items()}
+    reds = {name: p.redundancy_ratio() for name, p in plans.items()}
 
     sample = wl.queries[:150]
     print(f"{'strategy':8s} {'q/min':>12s} {'avg rt (ms)':>12s} "

@@ -12,6 +12,12 @@ Online:
     executor.DistributedEngine.execute        (§7.2-7.3, Algorithms 3+4)
     (adaptive re-fragmentation control plane: see repro.online -- it
     hooks DistributedEngine.post_execute_hooks to watch the stream)
+
+Public API (PR 2): the offline phase produces a serializable
+``PartitionPlan`` (``build_plan``; strategies registered in
+``STRATEGIES``) and queries run through a ``Session`` facade that speaks
+the one ``Engine`` protocol over every backend ("local", "baseline",
+"spmd", "adaptive").  ``WorkloadPartitioner`` is a deprecated shim.
 """
 from .graph import RDFGraph, example_graph, generate_watdiv
 from .query import QueryGraph, is_subgraph_of, find_embedding
@@ -27,11 +33,15 @@ from .allocation import (Allocation, affinity_matrix, allocate,
 from .dictionary import DataDictionary
 from .decomposition import Decomposition, decompose
 from .optimizer import JoinPlan, optimize
+from .engine import Engine, EngineBase, EngineStats
 from .executor import (CostModel, DistributedEngine, ExecStats, QueryResult,
                        simulate_throughput)
 from .baselines import (BaselineEngine, BaselineFragmentation,
                         shape_fragmentation, warp_fragmentation)
-from .pipeline import WorkloadPartitioner, PartitionConfig
+from .plan import (PartitionConfig, PartitionPlan, STRATEGIES,
+                   StrategyRegistry, build_plan, register_strategy)
+from .session import BACKENDS, Session
+from .pipeline import WorkloadPartitioner
 
 __all__ = [
     "RDFGraph", "example_graph", "generate_watdiv",
@@ -48,5 +58,8 @@ __all__ = [
     "QueryResult",
     "simulate_throughput", "BaselineEngine", "BaselineFragmentation",
     "shape_fragmentation", "warp_fragmentation",
+    "Engine", "EngineBase", "EngineStats",
+    "PartitionPlan", "build_plan", "STRATEGIES", "StrategyRegistry",
+    "register_strategy", "BACKENDS", "Session",
     "WorkloadPartitioner", "PartitionConfig",
 ]

@@ -19,6 +19,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from .engine import EngineBase
 from .executor import (CostModel, ExecStats, QueryResult, _dedup_rows,
                        _nrows, join_bindings)
 from .graph import RDFGraph
@@ -157,13 +158,22 @@ def _star_decomposition(query: QueryGraph) -> List[List[int]]:
     return stars
 
 
-class BaselineEngine:
+class BaselineEngine(EngineBase):
     """SHAPE/WARP-style engine: every query touches all sites; local
-    matching per site; cross-site joins between local units."""
+    matching per site; cross-site joins between local units.
+
+    The local-unit granularity depends on what the fragmentation
+    guarantees: SHAPE co-locates every edge incident to a vertex, and
+    WARP's base partition assigns edges by subject part, so both answer
+    subject-rooted *stars* locally.  An arbitrary (plan-derived)
+    fragmentation only guarantees edge coverage, so any other
+    ``frag.name`` falls back to edge-at-a-time units -- exact over any
+    covering site assignment."""
 
     def __init__(self, graph: RDFGraph, frag: BaselineFragmentation,
                  local_patterns: Optional[Sequence[QueryGraph]] = None,
                  cost: Optional[CostModel] = None):
+        self._init_engine_base()
         self.graph = graph
         self.frag = frag
         self.cost = cost or CostModel()
@@ -183,7 +193,9 @@ class BaselineEngine:
             code = query.normalize().canonical_code()
             if code in self.local_patterns:
                 return [list(range(query.num_edges))]  # replication covers it
-        return _star_decomposition(query)
+        if self.frag.name in ("SHAPE", "WARP"):
+            return _star_decomposition(query)
+        return [[i] for i in range(query.num_edges)]
 
     def execute(self, query: QueryGraph) -> QueryResult:
         cm = self.cost
@@ -226,4 +238,4 @@ class BaselineEngine:
         rt = local + comm + join_time
         stats = ExecStats(rt, comm_bytes, set(range(self.num_sites)), busy,
                           _nrows(acc), len(units))
-        return QueryResult(acc, _nrows(acc), stats)
+        return self._finish(query, QueryResult(acc, _nrows(acc), stats))

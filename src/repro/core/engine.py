@@ -1,0 +1,113 @@
+"""The unified ``Engine`` protocol: one query-facing surface for every
+execution backend (host-exact, baseline, SPMD, adaptive).
+
+The paper describes a single online phase (§7) -- decompose, match per
+site, join -- but a repro naturally grows several engines: the exact
+host engine over the workload-driven allocation, the SHAPE/WARP
+comparison engines, the jit/shard_map SPMD path, and the adaptive
+control plane.  This module pins down the *contract* they all share so
+callers (benchmarks, examples, the throughput simulator, the online
+loop) never care which one they hold:
+
+* ``execute(query) -> QueryResult``        -- one query;
+* ``execute_many(queries, batch_size)``    -- a stream, chunked into
+  batches (backends may override ``_execute_batch`` to exploit
+  intra-batch structure; the SPMD engine amortizes compilation across
+  the whole stream via its shape-keyed matcher cache);
+* ``stats() -> EngineStats``               -- cumulative counters;
+* ``post_execute_hooks``                   -- observers called as
+  ``hook(query, result)`` after every execution (the online monitor
+  taps the stream here, on *every* backend);
+* ``num_sites``                            -- cluster width.
+
+``EngineBase`` is the shared implementation: counter bookkeeping, hook
+dispatch, and a sequential ``execute_many`` that backends override per
+batch.  Concrete engines call ``_init_engine_base()`` in ``__init__``
+and funnel every finished query through ``_finish(query, result)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (TYPE_CHECKING, Any, Callable, Dict, List, Protocol,
+                    Sequence, runtime_checkable)
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .executor import QueryResult
+    from .query import QueryGraph
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Cumulative execution counters, uniform across backends."""
+    queries: int = 0
+    result_rows: int = 0
+    comm_bytes: int = 0
+    response_time: float = 0.0
+    backend: str = ""
+    strategy: str = ""
+    extra: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """Structural type every execution backend satisfies."""
+
+    post_execute_hooks: List[Callable[["QueryGraph", "QueryResult"], None]]
+
+    @property
+    def num_sites(self) -> int: ...
+
+    def execute(self, query: "QueryGraph") -> "QueryResult": ...
+
+    def execute_many(self, queries: Sequence["QueryGraph"],
+                     batch_size: int = 64) -> List["QueryResult"]: ...
+
+    def stats(self) -> EngineStats: ...
+
+
+class EngineBase:
+    """Shared counter/hook plumbing + batched ``execute_many``."""
+
+    def _init_engine_base(self) -> None:
+        self.post_execute_hooks: List[Callable[[Any, Any], None]] = []
+        self._n_queries = 0
+        self._n_rows = 0
+        self._n_comm_bytes = 0
+        self._t_response = 0.0
+
+    # ------------------------------------------------------------------
+    def _finish(self, query: "QueryGraph", result: "QueryResult"
+                ) -> "QueryResult":
+        """Record counters and run observers; every execute() ends here."""
+        self._n_queries += 1
+        self._n_rows += result.num_rows
+        self._n_comm_bytes += result.stats.comm_bytes
+        self._t_response += result.stats.response_time
+        for hook in self.post_execute_hooks:
+            hook(query, result)
+        return result
+
+    # ------------------------------------------------------------------
+    def execute_many(self, queries: Sequence["QueryGraph"],
+                     batch_size: int = 64) -> List["QueryResult"]:
+        """Execute a query stream in batches.  Result order always
+        matches input order; backends override ``_execute_batch`` to
+        exploit intra-batch structure (shape grouping, plan reuse)."""
+        bs = max(int(batch_size), 1)
+        out: List["QueryResult"] = []
+        for i in range(0, len(queries), bs):
+            out.extend(self._execute_batch(list(queries[i:i + bs])))
+        return out
+
+    def _execute_batch(self, batch: List["QueryGraph"]
+                       ) -> List["QueryResult"]:
+        return [self.execute(q) for q in batch]
+
+    # ------------------------------------------------------------------
+    def stats(self) -> EngineStats:
+        return EngineStats(self._n_queries, self._n_rows,
+                           self._n_comm_bytes, self._t_response,
+                           extra=self._stats_extra())
+
+    def _stats_extra(self) -> Dict[str, float]:
+        return {}

@@ -21,13 +21,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from .allocation import Allocation
 from .decomposition import Decomposition, decompose
 from .dictionary import DataDictionary
+from .engine import EngineBase, EngineStats
 from .fragmentation import Fragment, Fragmentation
 from .graph import RDFGraph
 from .matching import MatchResult, _PropIndex, match_pattern
@@ -122,12 +123,17 @@ def _nrows(cols: Dict[int, np.ndarray]) -> int:
 # Host execution engine
 # ----------------------------------------------------------------------
 
-class DistributedEngine:
+class DistributedEngine(EngineBase):
     """Fragment-resident distributed SPARQL engine (host-exact)."""
 
     def __init__(self, graph: RDFGraph, frag: Fragmentation,
                  alloc: Allocation, dictionary: DataDictionary,
                  cold_props: Set[int], cost: Optional[CostModel] = None):
+        # EngineBase provides post_execute_hooks -- the online hook
+        # point: called as hook(query, result) after every execute();
+        # the adaptive control plane (repro.online) feeds its workload
+        # monitor through this without wrapping the hot path.
+        self._init_engine_base()
         self.graph = graph
         self.frag = frag
         self.alloc = alloc
@@ -137,11 +143,10 @@ class DistributedEngine:
         # materialize per-fragment subgraphs + their match indexes lazily
         self._frag_graphs: Dict[Tuple[str, int], RDFGraph] = {}
         self._frag_index: Dict[Tuple[str, int], _PropIndex] = {}
-        # online hook point: called as hook(query, result) after every
-        # execute() -- the adaptive control plane (repro.online) feeds its
-        # workload monitor through this without wrapping the hot path.
-        self.post_execute_hooks: List[Callable[[QueryGraph, "QueryResult"],
-                                               None]] = []
+
+    @property
+    def num_sites(self) -> int:
+        return self.dict.num_sites
 
     # -- fragment access ------------------------------------------------
     def _fragment(self, kind: str, fi: int) -> Tuple[RDFGraph, _PropIndex]:
@@ -259,10 +264,10 @@ class DistributedEngine:
 
         stats = ExecStats(rt, comm_bytes, sites_touched, busy,
                           _nrows(acc), len(decomp.subqueries))
-        result = QueryResult(acc, _nrows(acc), stats)
-        for hook in self.post_execute_hooks:
-            hook(query, result)
-        return result
+        return self._finish(query, QueryResult(acc, _nrows(acc), stats))
+
+    def _stats_extra(self) -> Dict[str, float]:
+        return {"num_fragments": float(len(self.frag.fragments))}
 
 
 def _dedup_rows(cols: Dict[int, np.ndarray]) -> Dict[int, np.ndarray]:
@@ -292,10 +297,10 @@ def _dedup_rows(cols: Dict[int, np.ndarray]) -> Dict[int, np.ndarray]:
 def simulate_throughput(engine, queries: Sequence[QueryGraph],
                         horizon_sec: float = 60.0) -> Tuple[float, List[ExecStats]]:
     """List-schedule the query stream; queries occupy only the sites they
-    touch, so disjoint-footprint queries overlap (the VF win).  Returns
-    (queries per minute at the observed makespan, stats)."""
-    n_sites = (engine.dict.num_sites if hasattr(engine, "dict")
-               else engine.num_sites)
+    touch, so disjoint-footprint queries overlap (the VF win).  Accepts
+    anything implementing the ``Engine`` protocol (``engine.num_sites``
+    + ``execute``), including a ``Session``."""
+    n_sites = engine.num_sites
     site_free = np.zeros(n_sites)
     stats: List[ExecStats] = []
     for q in queries:

@@ -1,140 +1,89 @@
-"""End-to-end offline pipeline (Fig. 3 system architecture, offline phase):
-mine -> select -> fragment -> allocate -> dictionary, bundled into one
-object the online engine and the benchmarks consume.
+"""Deprecated compatibility layer over the plan/session API.
+
+The offline pipeline moved to ``repro.core.plan`` (``build_plan`` ->
+``PartitionPlan``) and engines are built through ``repro.core.session``
+(``Session(plan, backend=...)``).  ``WorkloadPartitioner`` remains as a
+thin shim so existing imports keep working; new code should call
+``build_plan`` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+import warnings
+from typing import List, Optional, Set
 
-import numpy as np
-
-from .allocation import Allocation, allocate_fragments
-from .decomposition import decompose
-from .dictionary import DataDictionary
 from .executor import CostModel, DistributedEngine
-from .fragmentation import Fragmentation, build_fragmentation
+from .plan import (OfflineStats, PartitionConfig,  # noqa: F401 (re-export)
+                   PartitionPlan, build_plan)
 from .graph import RDFGraph
-from .mining import (FrequentPattern, frequent_properties,
-                     mine_frequent_patterns_deduped, usage_matrix)
 from .query import QueryGraph
-from .selection import SelectionResult, select_patterns
-from .matching import _PropIndex, count_matches, match_edge_ids
 from .workload import Workload
 
-
-@dataclasses.dataclass
-class PartitionConfig:
-    min_sup_fraction: float = 0.001   # minSup as a fraction of |Q| (§8.2)
-    theta_fraction: float = 0.001     # hot-property threshold (Def. 5)
-    storage_factor: float = 1.6       # SC = factor * |E(hot)| (§4.1.2)
-    kind: str = "vertical"            # vertical | horizontal
-    num_sites: int = 10               # paper's cluster size
-    max_pattern_edges: int = 6
-    per_pattern_predicates: int = 2   # simple predicates per FAP (§5.2)
-    num_cold_parts: int = 2
-    balance_factor: float = 0.0       # 0 = faithful Algorithm 2
-    max_rows: int = 5_000_000
-
-
-@dataclasses.dataclass
-class OfflineStats:
-    mine_sec: float
-    select_sec: float
-    fragment_sec: float
-    allocate_sec: float
-    num_patterns_mined: int
-    num_patterns_selected: int
-    num_fragments: int
-    redundancy_ratio: float
-    hit_rate: float                    # fraction of workload hit by FAPs
-    benefit: float
+__all__ = ["PartitionConfig", "OfflineStats", "WorkloadPartitioner"]
 
 
 class WorkloadPartitioner:
-    """Owns the offline phase; produces a ready DistributedEngine."""
+    """Deprecated: use ``build_plan`` + ``Session`` instead.
+
+    ``run()`` now just builds a ``PartitionPlan`` (exposed as ``.plan``);
+    the legacy attributes (``frag``, ``alloc``, ``dict``, ``stats``, ...)
+    read through to it.
+    """
 
     def __init__(self, graph: RDFGraph, workload: Workload,
                  config: Optional[PartitionConfig] = None):
+        warnings.warn(
+            "WorkloadPartitioner is deprecated; use "
+            "repro.core.build_plan(graph, workload, config) and "
+            "repro.core.Session(plan, backend=...)",
+            DeprecationWarning, stacklevel=2)
         self.graph = graph
         self.workload = workload
         self.cfg = config or PartitionConfig()
-        self.stats: Optional[OfflineStats] = None
-        self.frag: Optional[Fragmentation] = None
-        self.alloc: Optional[Allocation] = None
-        self.dict: Optional[DataDictionary] = None
-        self.selected_patterns: List[QueryGraph] = []
-        self.cold_props: Set[int] = set()
+        self.plan: Optional[PartitionPlan] = None
 
     # ------------------------------------------------------------------
     def run(self) -> "WorkloadPartitioner":
-        cfg = self.cfg
-        g, wl = self.graph, self.workload
-        min_sup = max(int(len(wl) * cfg.min_sup_fraction), 1)
-        theta = max(int(len(wl) * cfg.theta_fraction), 1)
-
-        # --- mine (§4) ---
-        t0 = time.perf_counter()
-        uniq, weights = wl.dedup_normalized()
-        fps = mine_frequent_patterns_deduped(uniq, weights, min_sup,
-                                             cfg.max_pattern_edges)
-        t_mine = time.perf_counter() - t0
-
-        # ensure integrity: add 1-edge patterns for every frequent property
-        fprops = frequent_properties(wl, theta)
-        have = {fp.pattern.canonical_code(): True for fp in fps
-                if fp.num_edges == 1}
-        for prop in fprops:
-            pat = QueryGraph.make([(-1, -2, prop)])
-            if pat.canonical_code() not in have:
-                sup = sum(int(w) for q, w in zip(uniq, weights)
-                          if prop in q.properties())
-                fps.append(FrequentPattern(pat, sup, set()))
-        self.cold_props = set(range(g.num_properties)) - set(fprops)
-
-        # --- select (§4.1) ---
-        t0 = time.perf_counter()
-        patterns = [fp.pattern for fp in fps]
-        U = usage_matrix(patterns, uniq)
-        idx = _PropIndex(g)
-        frag_sizes = np.array(
-            [len(match_edge_ids(g, p, index=idx, max_rows=cfg.max_rows))
-             for p in patterns], dtype=np.int64)
-        hot_ids, _ = g.hot_cold_split(fprops)
-        sc = max(int(len(hot_ids) * cfg.storage_factor),
-                 int(frag_sizes[[i for i, fp in enumerate(fps)
-                                 if fp.num_edges == 1]].sum()) + 1)
-        sel = select_patterns(fps, U, weights, frag_sizes, sc, fprops)
-        self.selection = sel
-        self.selected_patterns = [patterns[i] for i in sel.selected]
-        sel_U = U[:, sel.selected]
-        t_sel = time.perf_counter() - t0
-
-        # --- fragment (§5) ---
-        t0 = time.perf_counter()
-        self.frag = build_fragmentation(
-            g, wl, self.selected_patterns, theta, cfg.kind,
-            cfg.num_cold_parts, cfg.per_pattern_predicates, cfg.max_rows)
-        t_frag = time.perf_counter() - t0
-
-        # --- allocate (§6) ---
-        t0 = time.perf_counter()
-        self.alloc = allocate_fragments(self.frag, sel_U, weights,
-                                        cfg.num_sites, cfg.balance_factor)
-        self.dict = DataDictionary.build(g, self.frag, self.alloc,
-                                         cfg.num_sites)
-        t_alloc = time.perf_counter() - t0
-
-        hit = float((sel_U.max(axis=1) > 0) @ weights) / max(weights.sum(), 1)
-        self.stats = OfflineStats(
-            t_mine, t_sel, t_frag, t_alloc, len(fps), len(sel.selected),
-            len(self.frag.fragments), self.frag.redundancy_ratio(g),
-            float(hit), sel.benefit)
+        self.plan = build_plan(self.graph, self.workload, self.cfg)
         return self
+
+    def _plan(self) -> PartitionPlan:
+        if self.plan is None:
+            raise RuntimeError(
+                "WorkloadPartitioner.run() has not been called yet")
+        return self.plan
+
+    # -- legacy attribute surface ---------------------------------------
+    @property
+    def stats(self):
+        return self._plan().stats
+
+    @property
+    def frag(self):
+        return self._plan().frag
+
+    @property
+    def alloc(self):
+        return self._plan().alloc
+
+    @property
+    def dict(self):
+        return self._plan().dictionary
+
+    @property
+    def selected_patterns(self) -> List[QueryGraph]:
+        return self._plan().selected_patterns
+
+    @property
+    def cold_props(self) -> Set[int]:
+        return self._plan().cold_props
+
+    @property
+    def selection(self):
+        return self._plan().selection
 
     # ------------------------------------------------------------------
     def engine(self, cost: Optional[CostModel] = None) -> DistributedEngine:
-        assert self.frag is not None, "run() first"
-        return DistributedEngine(self.graph, self.frag, self.alloc,
-                                 self.dict, self.cold_props, cost)
+        if self.plan is None:
+            raise RuntimeError(
+                "WorkloadPartitioner.run() must be called before engine()")
+        return self.plan.build_local_engine(cost)

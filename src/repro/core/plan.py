@@ -1,0 +1,573 @@
+"""``PartitionPlan``: the serializable product of the offline phase, and
+the ``StrategyRegistry`` that produces one from any registered
+fragmentation strategy.
+
+The paper's offline pipeline (Fig. 3: mine -> select -> fragment ->
+allocate -> dictionary) used to live inside ``WorkloadPartitioner`` and
+each comparison baseline had its own construction dance.  This module
+makes the *artifact* first-class instead:
+
+* ``build_plan(graph, workload, config)`` dispatches on
+  ``config.kind`` through the strategy registry -- ``"vertical"`` /
+  ``"horizontal"`` (the paper's §5), ``"shape"`` / ``"warp"`` (the §8
+  baselines) -- and returns a ``PartitionPlan`` bundling fragmentation,
+  allocation, data dictionary, selected FAPs, the design workload, and
+  full config provenance.
+* ``PartitionPlan.save()`` / ``PartitionPlan.load()`` round-trip the
+  plan through ``repro.checkpoint`` (npz-per-leaf + a ``plan.json``
+  manifest), so the offline phase runs once and any engine backend can
+  be rebuilt from disk (``repro.core.session.Session``).
+* New strategies are one ``@register_strategy("name")`` away; config
+  validation lists whatever is registered.
+
+Engines are *built from* plans (``build_local_engine`` etc. -- the
+``Session`` facade picks per backend); a plan itself holds no device
+state and pickles/ships cleanly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .allocation import Allocation, allocate_fragments
+from .baselines import (BaselineEngine, BaselineFragmentation,
+                        shape_fragmentation, warp_fragmentation)
+from .dictionary import DataDictionary
+from .executor import CostModel, DistributedEngine
+from .fragmentation import (Fragment, Fragmentation, MintermPredicate,
+                            SimplePredicate, build_fragmentation)
+from .graph import RDFGraph
+from .matching import _PropIndex, match_edge_ids
+from .mining import (FrequentPattern, frequent_properties,
+                     mine_frequent_patterns_deduped, usage_matrix)
+from .query import QueryGraph
+from .selection import SelectionResult, select_patterns
+from .workload import Workload
+
+PLAN_FORMAT_VERSION = 1
+
+
+# ----------------------------------------------------------------------
+# Strategy registry
+# ----------------------------------------------------------------------
+
+class StrategyRegistry:
+    """Name -> builder(graph, workload, config) -> PartitionPlan."""
+
+    def __init__(self) -> None:
+        self._builders: Dict[str, Callable[..., "PartitionPlan"]] = {}
+
+    def register(self, name: str) -> Callable:
+        def deco(fn: Callable[..., "PartitionPlan"]) -> Callable:
+            self._builders[name] = fn
+            return fn
+        return deco
+
+    def unregister(self, name: str) -> None:
+        self._builders.pop(name, None)
+
+    def get(self, name: str) -> Callable[..., "PartitionPlan"]:
+        if name not in self._builders:
+            raise ValueError(
+                f"unknown fragmentation strategy {name!r}; registered "
+                f"strategies: {self.names()}")
+        return self._builders[name]
+
+    def names(self) -> List[str]:
+        return sorted(self._builders)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._builders
+
+
+STRATEGIES = StrategyRegistry()
+register_strategy = STRATEGIES.register
+
+
+# ----------------------------------------------------------------------
+# Config + offline stats (moved here from core.pipeline; the old module
+# re-exports them)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PartitionConfig:
+    min_sup_fraction: float = 0.001   # minSup as a fraction of |Q| (§8.2)
+    theta_fraction: float = 0.001     # hot-property threshold (Def. 5)
+    storage_factor: float = 1.6       # SC = factor * |E(hot)| (§4.1.2)
+    kind: str = "vertical"            # any registered strategy name
+    num_sites: int = 10               # paper's cluster size
+    max_pattern_edges: int = 6
+    per_pattern_predicates: int = 2   # simple predicates per FAP (§5.2)
+    num_cold_parts: int = 2
+    balance_factor: float = 0.0       # 0 = faithful Algorithm 2
+    max_rows: int = 5_000_000
+
+    def __post_init__(self) -> None:
+        if self.kind not in STRATEGIES:
+            raise ValueError(
+                f"unknown fragmentation strategy kind={self.kind!r}; "
+                f"registered strategies: {STRATEGIES.names()}")
+        if self.num_sites < 1:
+            raise ValueError(f"num_sites must be >= 1, got {self.num_sites}")
+
+
+@dataclasses.dataclass
+class OfflineStats:
+    mine_sec: float
+    select_sec: float
+    fragment_sec: float
+    allocate_sec: float
+    num_patterns_mined: int
+    num_patterns_selected: int
+    num_fragments: int
+    redundancy_ratio: float
+    hit_rate: float                    # fraction of workload hit by FAPs
+    benefit: float
+
+
+# ----------------------------------------------------------------------
+# Query (de)serialization helpers: flat int64 stream
+# [n_edges, s,d,p, s,d,p, ...] per query -- tiny, checkpoint-friendly.
+# ----------------------------------------------------------------------
+
+def encode_queries(queries: Sequence[QueryGraph]) -> np.ndarray:
+    out: List[int] = []
+    for q in queries:
+        out.append(q.num_edges)
+        for e in q.edges:
+            out.extend((e.src, e.dst, e.prop))
+    return np.asarray(out, dtype=np.int64) if out else np.zeros(0, np.int64)
+
+
+def decode_queries(flat: np.ndarray) -> List[QueryGraph]:
+    flat = np.asarray(flat, dtype=np.int64)
+    qs: List[QueryGraph] = []
+    i = 0
+    while i < len(flat):
+        n = int(flat[i])
+        i += 1
+        qs.append(QueryGraph.make(
+            [(int(flat[i + 3 * k]), int(flat[i + 3 * k + 1]),
+              int(flat[i + 3 * k + 2])) for k in range(n)]))
+        i += 3 * n
+    return qs
+
+
+def _minterm_to_json(mt: Optional[MintermPredicate]) -> Optional[dict]:
+    if mt is None:
+        return None
+    return {"pattern_idx": mt.pattern_idx,
+            "terms": [[t.var, t.value, bool(t.equal)] for t in mt.terms]}
+
+
+def _minterm_from_json(d: Optional[dict]) -> Optional[MintermPredicate]:
+    if d is None:
+        return None
+    return MintermPredicate(int(d["pattern_idx"]), tuple(
+        SimplePredicate(int(v), int(val), bool(eq))
+        for v, val, eq in d["terms"]))
+
+
+def _graph_signature(graph: RDFGraph) -> Dict[str, int]:
+    """Size counts + a content checksum of the triple arrays: fragment
+    edge ids index into the graph, so size-equal but different graphs
+    must be rejected at load time."""
+    import zlib
+    crc = 0
+    for a in (graph.s, graph.p, graph.o):
+        crc = zlib.crc32(np.ascontiguousarray(a, np.int32).tobytes(), crc)
+    return {"num_edges": graph.num_edges,
+            "num_vertices": graph.num_vertices,
+            "num_properties": graph.num_properties,
+            "triples_crc32": int(crc)}
+
+
+# ----------------------------------------------------------------------
+# The plan artifact
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(eq=False)
+class PartitionPlan:
+    """Fragmentation + allocation + dictionary + selected FAPs + config
+    provenance, detached from any engine.  ``graph`` is a runtime
+    attachment (fragments store edge ids *into* it); ``save()`` records
+    only its signature and ``load()`` re-attaches and validates."""
+
+    strategy: str
+    config: PartitionConfig
+    graph: Optional[RDFGraph] = None
+    selected_patterns: List[QueryGraph] = dataclasses.field(default_factory=list)
+    frag: Optional[Fragmentation] = None
+    alloc: Optional[Allocation] = None
+    dictionary: Optional[DataDictionary] = None
+    cold_props: Set[int] = dataclasses.field(default_factory=set)
+    baseline_frag: Optional[BaselineFragmentation] = None
+    design_workload: Optional[Workload] = None
+    sel_usage: Optional[np.ndarray] = None   # deduped usage over selected
+    weights: Optional[np.ndarray] = None     # deduped query multiplicities
+    stats: Optional[OfflineStats] = None
+    selection: Optional[SelectionResult] = None  # runtime-only provenance
+
+    # -- basic facts ----------------------------------------------------
+    @property
+    def num_sites(self) -> int:
+        return self.config.num_sites
+
+    def redundancy_ratio(self) -> float:
+        if self.graph is None:
+            raise RuntimeError("plan has no attached graph")
+        if self.frag is not None:
+            return self.frag.redundancy_ratio(self.graph)
+        if self.baseline_frag is not None:
+            return self.baseline_frag.redundancy_ratio(self.graph)
+        raise RuntimeError("plan holds no fragmentation")
+
+    def site_edge_ids(self) -> List[np.ndarray]:
+        """Edge ids resident per site -- the uniform storage view every
+        backend can consume (SPMD SiteStore, baseline engine).  Hot
+        fragments follow the allocation; cold fragments ride round-robin
+        exactly as in ``DataDictionary.build``."""
+        if self.baseline_frag is not None:
+            return list(self.baseline_frag.site_edges)
+        if self.frag is None or self.alloc is None:
+            raise RuntimeError("plan holds no fragmentation/allocation")
+        per_site: List[List[np.ndarray]] = [[] for _ in range(self.num_sites)]
+        for fi, f in enumerate(self.frag.fragments):
+            per_site[int(self.alloc.site_of[fi])].append(f.edge_ids)
+        for k, f in enumerate(self.frag.cold_fragments):
+            per_site[k % self.num_sites].append(f.edge_ids)
+        return [np.unique(np.concatenate(g)) if g
+                else np.zeros(0, np.int64) for g in per_site]
+
+    # -- engine construction (the Session facade picks per backend) -----
+    def build_local_engine(self, cost: Optional[CostModel] = None
+                           ) -> DistributedEngine:
+        if self.graph is None:
+            raise RuntimeError("plan has no attached graph")
+        if self.frag is None or self.alloc is None or self.dictionary is None:
+            raise ValueError(
+                f"strategy {self.strategy!r} produces site-partitioned "
+                f"storage only (no fragment dictionary); use "
+                f"backend='baseline' or backend='spmd'")
+        return DistributedEngine(self.graph, self.frag, self.alloc,
+                                 self.dictionary, set(self.cold_props), cost)
+
+    def build_baseline_engine(self, cost: Optional[CostModel] = None
+                              ) -> BaselineEngine:
+        if self.graph is None:
+            raise RuntimeError("plan has no attached graph")
+        if self.baseline_frag is not None:
+            bf = self.baseline_frag
+        else:
+            bf = BaselineFragmentation(self.site_edge_ids(),
+                                       f"PLAN:{self.strategy}")
+        local = self.selected_patterns if bf.name == "WARP" else None
+        return BaselineEngine(self.graph, bf, local_patterns=local, cost=cost)
+
+    def build_spmd_engine(self, mesh=None, axis: str = "sites",
+                          capacity: int = 4096,
+                          cost: Optional[CostModel] = None):
+        if self.graph is None:
+            raise RuntimeError("plan has no attached graph")
+        from .spmd import SpmdEngine   # lazy: keeps jax off the plan path
+        return SpmdEngine(self.graph, self.site_edge_ids(), mesh=mesh,
+                          axis=axis, capacity=capacity, cost=cost)
+
+    # -- serialization (built on repro.checkpoint) ----------------------
+    def save(self, path) -> Path:
+        """Write the plan under ``path/`` (``plan.json`` + an npz-per-leaf
+        checkpoint).  The graph itself is NOT stored -- only its
+        signature, validated on load."""
+        if self.graph is None:
+            raise RuntimeError("plan has no attached graph to sign")
+        from ..checkpoint.ckpt import save_checkpoint
+        path = Path(path)
+        arrays: Dict[str, np.ndarray] = {}
+        meta: Dict[str, object] = {
+            "format": PLAN_FORMAT_VERSION,
+            "strategy": self.strategy,
+            "config": dataclasses.asdict(self.config),
+            "graph_signature": _graph_signature(self.graph),
+            "patterns": [encode_queries([p]).tolist()
+                         for p in self.selected_patterns],
+            "stats": (dataclasses.asdict(self.stats)
+                      if self.stats is not None else None),
+        }
+        arrays["cold_props"] = np.asarray(sorted(self.cold_props), np.int64)
+        if self.design_workload is not None:
+            arrays["design_workload"] = encode_queries(
+                self.design_workload.queries)
+        if self.frag is not None:
+            meta["fragments"] = [
+                {"pattern_idx": f.pattern_idx, "card": f.card,
+                 "kind": f.kind, "minterm": _minterm_to_json(f.minterm)}
+                for f in self.frag.fragments]
+            meta["cold_fragments"] = [
+                {"kind": f.kind} for f in self.frag.cold_fragments]
+            for i, f in enumerate(self.frag.fragments):
+                arrays[f"frag_{i}"] = np.asarray(f.edge_ids, np.int64)
+            for i, f in enumerate(self.frag.cold_fragments):
+                arrays[f"cold_{i}"] = np.asarray(f.edge_ids, np.int64)
+        if self.alloc is not None:
+            arrays["site_of"] = np.asarray(self.alloc.site_of, np.int64)
+        if self.baseline_frag is not None:
+            meta["baseline"] = {
+                "name": self.baseline_frag.name,
+                "num_sites": len(self.baseline_frag.site_edges)}
+            for j, e in enumerate(self.baseline_frag.site_edges):
+                arrays[f"site_{j}"] = np.asarray(e, np.int64)
+        if self.sel_usage is not None:
+            arrays["sel_usage"] = np.asarray(self.sel_usage, np.float64)
+        if self.weights is not None:
+            arrays["weights"] = np.asarray(self.weights, np.int64)
+        meta["arrays"] = {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                          for k, v in arrays.items()}
+        save_checkpoint(path, 0, arrays)
+        (path / "plan.json").write_text(json.dumps(meta, indent=1))
+        return path
+
+    @staticmethod
+    def load(path, graph: RDFGraph) -> "PartitionPlan":
+        """Rebuild a plan from ``save()`` output; ``graph`` must be the
+        graph the plan was built on (signature-checked).  The data
+        dictionary is rebuilt, so a loaded plan serves queries without
+        re-running the offline phase."""
+        from ..checkpoint.ckpt import load_checkpoint
+        path = Path(path)
+        meta = json.loads((path / "plan.json").read_text())
+        if meta.get("format") != PLAN_FORMAT_VERSION:
+            raise ValueError(f"unsupported plan format {meta.get('format')}")
+        sig = meta["graph_signature"]
+        got = _graph_signature(graph)
+        if sig != got:
+            raise ValueError(
+                f"plan was built on a different graph: saved signature "
+                f"{sig}, attached graph {got}")
+        like = {k: np.zeros(tuple(spec["shape"]), dtype=spec["dtype"])
+                for k, spec in meta["arrays"].items()}
+        raw = load_checkpoint(path, 0, like)
+        arrays = {k: np.asarray(raw[k]).astype(meta["arrays"][k]["dtype"])
+                  for k in like}
+        cfg = PartitionConfig(**meta["config"])
+        patterns = [decode_queries(np.asarray(flat, np.int64))[0]
+                    for flat in meta["patterns"]]
+        frag = alloc = dictionary = None
+        if "fragments" in meta:
+            frags = [Fragment(arrays[f"frag_{i}"], int(fm["pattern_idx"]),
+                              _minterm_from_json(fm["minterm"]),
+                              int(fm["card"]), fm["kind"])
+                     for i, fm in enumerate(meta["fragments"])]
+            cold = [Fragment(arrays[f"cold_{i}"], -1, None, 0, cm["kind"])
+                    for i, cm in enumerate(meta["cold_fragments"])]
+            frag = Fragmentation(frags, list(patterns), cfg.kind, cold)
+            alloc = Allocation(arrays["site_of"], cfg.num_sites)
+            dictionary = DataDictionary.build(graph, frag, alloc,
+                                              cfg.num_sites)
+        baseline = None
+        if "baseline" in meta:
+            b = meta["baseline"]
+            baseline = BaselineFragmentation(
+                [arrays[f"site_{j}"] for j in range(int(b["num_sites"]))],
+                b["name"])
+        stats = (OfflineStats(**meta["stats"])
+                 if meta.get("stats") is not None else None)
+        wl = (Workload(decode_queries(arrays["design_workload"]))
+              if "design_workload" in arrays else None)
+        return PartitionPlan(
+            strategy=meta["strategy"], config=cfg, graph=graph,
+            selected_patterns=patterns, frag=frag, alloc=alloc,
+            dictionary=dictionary,
+            cold_props=set(int(p) for p in arrays["cold_props"]),
+            baseline_frag=baseline, design_workload=wl,
+            sel_usage=arrays.get("sel_usage"), weights=arrays.get("weights"),
+            stats=stats)
+
+    # -- equality (dtype-insensitive on arrays) --------------------------
+    def _state(self) -> Tuple:
+        def ai(a) -> Tuple:
+            a = np.asarray(a, np.int64)
+            return (a.shape, a.tobytes())
+
+        def af(a) -> Optional[Tuple]:
+            if a is None:
+                return None
+            a = np.asarray(a, np.float64)
+            return (a.shape, a.tobytes())
+
+        frag_state = None
+        if self.frag is not None:
+            frag_state = (
+                tuple((ai(f.edge_ids), f.pattern_idx, f.card, f.kind,
+                       _minterm_to_json(f.minterm) and
+                       json.dumps(_minterm_to_json(f.minterm)))
+                      for f in self.frag.fragments),
+                tuple((ai(f.edge_ids), f.kind)
+                      for f in self.frag.cold_fragments))
+        return (
+            self.strategy,
+            tuple(sorted(dataclasses.asdict(self.config).items())),
+            tuple(p.canonical_code() for p in self.selected_patterns),
+            frag_state,
+            ai(self.alloc.site_of) if self.alloc is not None else None,
+            tuple(sorted(self.cold_props)),
+            (self.baseline_frag.name,
+             tuple(ai(e) for e in self.baseline_frag.site_edges))
+            if self.baseline_frag is not None else None,
+            ai(encode_queries(self.design_workload.queries))
+            if self.design_workload is not None else None,
+            af(self.sel_usage),
+            ai(self.weights) if self.weights is not None else None,
+        )
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, PartitionPlan):
+            return NotImplemented
+        return self._state() == other._state()
+
+
+# ----------------------------------------------------------------------
+# Shared offline front: mine (§4) + select (§4.1)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _MinedSelection:
+    selected_patterns: List[QueryGraph]
+    sel_usage: np.ndarray
+    weights: np.ndarray
+    cold_props: Set[int]
+    fprops: List[int]
+    selection: SelectionResult
+    num_mined: int
+    hit_rate: float
+    mine_sec: float
+    select_sec: float
+
+
+def _mine_and_select(graph: RDFGraph, workload: Workload,
+                     cfg: PartitionConfig) -> _MinedSelection:
+    min_sup = max(int(len(workload) * cfg.min_sup_fraction), 1)
+    theta = max(int(len(workload) * cfg.theta_fraction), 1)
+
+    t0 = time.perf_counter()
+    uniq, weights = workload.dedup_normalized()
+    fps = mine_frequent_patterns_deduped(uniq, weights, min_sup,
+                                         cfg.max_pattern_edges)
+    t_mine = time.perf_counter() - t0
+
+    # integrity: add 1-edge patterns for every frequent property
+    fprops = frequent_properties(workload, theta)
+    have = {fp.pattern.canonical_code(): True for fp in fps
+            if fp.num_edges == 1}
+    for prop in fprops:
+        pat = QueryGraph.make([(-1, -2, prop)])
+        if pat.canonical_code() not in have:
+            sup = sum(int(w) for q, w in zip(uniq, weights)
+                      if prop in q.properties())
+            fps.append(FrequentPattern(pat, sup, set()))
+    cold_props = set(range(graph.num_properties)) - set(fprops)
+
+    t0 = time.perf_counter()
+    patterns = [fp.pattern for fp in fps]
+    U = usage_matrix(patterns, uniq)
+    idx = _PropIndex(graph)
+    frag_sizes = np.array(
+        [len(match_edge_ids(graph, p, index=idx, max_rows=cfg.max_rows))
+         for p in patterns], dtype=np.int64)
+    hot_ids, _ = graph.hot_cold_split(fprops)
+    sc = max(int(len(hot_ids) * cfg.storage_factor),
+             int(frag_sizes[[i for i, fp in enumerate(fps)
+                             if fp.num_edges == 1]].sum()) + 1)
+    sel = select_patterns(fps, U, weights, frag_sizes, sc, fprops)
+    selected = [patterns[i] for i in sel.selected]
+    sel_U = U[:, sel.selected]
+    t_sel = time.perf_counter() - t0
+
+    hit = float((sel_U.max(axis=1) > 0) @ weights) / max(weights.sum(), 1)
+    return _MinedSelection(selected, sel_U, weights, cold_props, fprops,
+                           sel, len(fps), float(hit), t_mine, t_sel)
+
+
+# ----------------------------------------------------------------------
+# Registered strategies
+# ----------------------------------------------------------------------
+
+def _workload_driven_plan(graph: RDFGraph, workload: Workload,
+                          cfg: PartitionConfig) -> PartitionPlan:
+    """The paper's pipeline: mine -> select -> fragment -> allocate ->
+    dictionary (vertical §5.1 or horizontal §5.2 per ``cfg.kind``)."""
+    ms = _mine_and_select(graph, workload, cfg)
+    theta = max(int(len(workload) * cfg.theta_fraction), 1)
+
+    t0 = time.perf_counter()
+    frag = build_fragmentation(
+        graph, workload, ms.selected_patterns, theta, cfg.kind,
+        cfg.num_cold_parts, cfg.per_pattern_predicates, cfg.max_rows)
+    t_frag = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    alloc = allocate_fragments(frag, ms.sel_usage, ms.weights,
+                               cfg.num_sites, cfg.balance_factor)
+    dictionary = DataDictionary.build(graph, frag, alloc, cfg.num_sites)
+    t_alloc = time.perf_counter() - t0
+
+    stats = OfflineStats(
+        ms.mine_sec, ms.select_sec, t_frag, t_alloc, ms.num_mined,
+        len(ms.selection.selected), len(frag.fragments),
+        frag.redundancy_ratio(graph), ms.hit_rate, ms.selection.benefit)
+    return PartitionPlan(
+        strategy=cfg.kind, config=cfg, graph=graph,
+        selected_patterns=ms.selected_patterns, frag=frag, alloc=alloc,
+        dictionary=dictionary, cold_props=ms.cold_props,
+        design_workload=workload, sel_usage=ms.sel_usage,
+        weights=ms.weights, stats=stats, selection=ms.selection)
+
+
+@register_strategy("vertical")
+def _vertical(graph: RDFGraph, workload: Workload,
+              cfg: PartitionConfig) -> PartitionPlan:
+    return _workload_driven_plan(graph, workload, cfg)
+
+
+@register_strategy("horizontal")
+def _horizontal(graph: RDFGraph, workload: Workload,
+                cfg: PartitionConfig) -> PartitionPlan:
+    return _workload_driven_plan(graph, workload, cfg)
+
+
+@register_strategy("shape")
+def _shape(graph: RDFGraph, workload: Workload,
+           cfg: PartitionConfig) -> PartitionPlan:
+    """SHAPE baseline (§8.1): workload-oblivious subject-object hashing."""
+    bf = shape_fragmentation(graph, cfg.num_sites)
+    return PartitionPlan(strategy="shape", config=cfg, graph=graph,
+                         baseline_frag=bf, design_workload=workload)
+
+
+@register_strategy("warp")
+def _warp(graph: RDFGraph, workload: Workload,
+          cfg: PartitionConfig) -> PartitionPlan:
+    """WARP baseline (§8.1): min-cut parts + replication of the mined
+    workload patterns that straddle parts."""
+    ms = _mine_and_select(graph, workload, cfg)
+    bf, _part = warp_fragmentation(graph, cfg.num_sites,
+                                   ms.selected_patterns)
+    return PartitionPlan(strategy="warp", config=cfg, graph=graph,
+                         selected_patterns=ms.selected_patterns,
+                         baseline_frag=bf, design_workload=workload,
+                         sel_usage=ms.sel_usage, weights=ms.weights,
+                         cold_props=ms.cold_props,
+                         selection=ms.selection)
+
+
+# ----------------------------------------------------------------------
+
+def build_plan(graph: RDFGraph, workload: Workload,
+               config: Optional[PartitionConfig] = None) -> PartitionPlan:
+    """Run the offline phase with the strategy named by ``config.kind``."""
+    cfg = config or PartitionConfig()
+    return STRATEGIES.get(cfg.kind)(graph, workload, cfg)

@@ -241,7 +241,9 @@ def min_dfs_code(g: QueryGraph) -> Tuple:
 
     for start in set([e.src for e in edges] + [e.dst for e in edges]):
         rec([], {start: 0}, frozenset(), [start])
-    assert best[0] is not None
+    if best[0] is None:
+        raise RuntimeError("canonical DFS-code search found no code "
+                           "(disconnected or malformed pattern?)")
     return best[0]
 
 

@@ -1,0 +1,94 @@
+"""``Session``: one query-facing entry point over every execution
+backend.
+
+A ``PartitionPlan`` says *where the data lives*; a ``Session`` says *how
+queries run against it*.  The same plan can be served by four backends
+through the identical ``Engine`` protocol:
+
+* ``"local"``    -- the exact host ``DistributedEngine`` over the
+                    fragment allocation (Algorithms 3+4);
+* ``"baseline"`` -- the gather-all ``BaselineEngine`` over the plan's
+                    per-site storage (SHAPE/WARP execution model);
+* ``"spmd"``     -- the jit/shard_map ``SpmdEngine`` (sites = mesh
+                    devices, fixed-capacity binding tables);
+* ``"adaptive"`` -- the online ``AdaptiveEngine`` control plane
+                    (monitor -> drift -> refragment -> migrate) wrapping
+                    the local engine.
+
+Typical use::
+
+    plan = build_plan(graph, workload, PartitionConfig(kind="vertical"))
+    plan.save("plans/v1")
+    ...
+    plan = PartitionPlan.load("plans/v1", graph)
+    with_spmd = Session(plan, backend="spmd", spmd_capacity=16384)
+    results = with_spmd.execute_many(queries, batch_size=32)
+
+``Session`` delegates the protocol to the backend engine it builds --
+hooks appended to ``session.post_execute_hooks`` observe every executed
+query regardless of backend (this is what closed the SPMD-path hook
+gap), and ``stats()`` is annotated with backend + strategy provenance.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence
+
+from .engine import EngineStats
+from .executor import CostModel, QueryResult
+from .plan import PartitionPlan
+from .query import QueryGraph
+
+BACKENDS = ("local", "baseline", "spmd", "adaptive")
+
+
+class Session:
+    """Engine-protocol facade over a ``PartitionPlan`` + backend choice."""
+
+    def __init__(self, plan: PartitionPlan, backend: str = "local", *,
+                 cost: Optional[CostModel] = None,
+                 adaptive_config=None,
+                 mesh=None, spmd_axis: str = "sites",
+                 spmd_capacity: int = 4096):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"choose one of {list(BACKENDS)}")
+        self.plan = plan
+        self.backend = backend
+        if backend == "local":
+            self.engine = plan.build_local_engine(cost)
+        elif backend == "baseline":
+            self.engine = plan.build_baseline_engine(cost)
+        elif backend == "spmd":
+            self.engine = plan.build_spmd_engine(
+                mesh=mesh, axis=spmd_axis, capacity=spmd_capacity, cost=cost)
+        else:  # adaptive
+            # lazy import: repro.online imports repro.core, not vice versa
+            from ..online.loop import AdaptiveEngine
+            self.engine = AdaptiveEngine(plan, adaptive_config, cost)
+
+    # -- Engine protocol, delegated -------------------------------------
+    @property
+    def post_execute_hooks(self) -> List[Callable[[QueryGraph, QueryResult],
+                                                  None]]:
+        return self.engine.post_execute_hooks
+
+    @property
+    def num_sites(self) -> int:
+        return self.engine.num_sites
+
+    def execute(self, query: QueryGraph) -> QueryResult:
+        return self.engine.execute(query)
+
+    def execute_many(self, queries: Sequence[QueryGraph],
+                     batch_size: int = 64) -> List[QueryResult]:
+        return self.engine.execute_many(queries, batch_size=batch_size)
+
+    def stats(self) -> EngineStats:
+        s = self.engine.stats()
+        s.backend = self.backend
+        s.strategy = self.plan.strategy
+        return s
+
+    def __repr__(self) -> str:
+        return (f"Session(strategy={self.plan.strategy!r}, "
+                f"backend={self.backend!r}, sites={self.num_sites})")

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -23,9 +24,11 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..kernels import ref as kref
+from .engine import EngineBase
+from .executor import CostModel, ExecStats, QueryResult
 from .fragmentation import Fragmentation
 from .graph import RDFGraph
-from .query import QueryGraph, _connected_edge_order
+from .query import PROP_VAR, QueryGraph, _connected_edge_order
 
 
 # ----------------------------------------------------------------------
@@ -120,6 +123,33 @@ def _expand_fixed(bind: jax.Array, valid: jax.Array, col_vals: jax.Array,
     new_col = jnp.where(ok, payload[src], -1)
     new_bind = jnp.where(ok[:, None], bind[r], -1)
     return new_bind, new_col, ok
+
+
+def pattern_var_order(pattern: QueryGraph) -> List[int]:
+    """Binding-table column order produced by ``local_match`` for this
+    pattern -- the same bookkeeping, host-side, without tracing."""
+    order = _connected_edge_order(pattern)
+    edges = pattern.edges
+    var_cols: List[int] = []
+    for step, ei in enumerate(order):
+        e = edges[ei]
+        if step == 0:
+            if e.src < 0:
+                var_cols.append(e.src)
+            if e.dst < 0 and e.dst != e.src:
+                var_cols.append(e.dst)
+            continue
+        s_known = e.src >= 0 or e.src in var_cols
+        d_known = e.dst >= 0 or e.dst in var_cols
+        if s_known and d_known:
+            continue
+        if s_known:
+            if e.dst < 0:
+                var_cols.append(e.dst)
+        else:
+            if e.src < 0:
+                var_cols.append(e.src)
+    return var_cols
 
 
 def local_match(s: jax.Array, p: jax.Array, o: jax.Array,
@@ -264,8 +294,137 @@ def spmd_match(store: SiteStore, mesh: Mesh, axis: str,
     """Run the SPMD matcher and return deduped host-side bindings."""
     fn = make_spmd_matcher(mesh, axis, pattern, capacity)
     bind, valid = jax.device_get(fn(store.s, store.p, store.o))
-    _, _, cols = local_match(store.s[0], store.p[0], store.o[0], pattern, 1)
+    cols = pattern_var_order(pattern)
     rows = bind[np.asarray(valid)]
     if rows.size:
         rows = np.unique(rows, axis=0)
     return rows, cols
+
+
+# ----------------------------------------------------------------------
+# SPMD execution engine (Engine protocol)
+# ----------------------------------------------------------------------
+
+class SpmdEngine(EngineBase):
+    """``Engine``-protocol front over the SPMD ``SiteStore`` path.
+
+    Logical sites are folded round-robin onto the mesh devices (on a
+    1-device CPU host everything lands in one shard; overlap across
+    folded sites is removed by the final dedup, so answers stay exact).
+    Queries are matched *whole* as one SPMD program; constants are
+    normalized out of the compiled pattern and re-applied as a host-side
+    filter, so the jit cache is keyed by query **shape** -- a workload
+    of thousands of template-instantiated queries compiles once per
+    template, and the cache persists across ``execute``/``execute_many``
+    calls for the engine's lifetime.
+
+    ``capacity`` bounds the per-device binding table; when a device
+    fills its table the result may be truncated -- tracked in
+    ``stats().extra["possible_overflows"]``.
+
+    Limitation: ``local_match`` joins only within a device's shard, so
+    with more than one device a match whose edges straddle shards is
+    missed (cross-device broadcast joins are a ROADMAP item).  Hot
+    (FAP) fragments are shard-complete by construction, but multi-edge
+    *cold* queries can straddle round-robin cold fragments -- a
+    UserWarning is raised at construction on multi-device meshes.
+    """
+
+    def __init__(self, graph: RDFGraph, site_edge_ids: Sequence[np.ndarray],
+                 mesh: Optional[Mesh] = None, axis: str = "sites",
+                 capacity: int = 4096, cost: Optional[CostModel] = None):
+        self._init_engine_base()
+        self.graph = graph
+        self.logical_sites = len(site_edge_ids)
+        if mesh is None:
+            from ..launch.mesh import make_host_mesh
+            mesh = make_host_mesh(len(jax.devices()), axis=axis)
+        self.mesh, self.axis = mesh, axis
+        m = int(np.prod(mesh.devices.shape))
+        folded: List[List[np.ndarray]] = [[] for _ in range(m)]
+        for j, eids in enumerate(site_edge_ids):
+            folded[j % m].append(np.asarray(eids, np.int64))
+        self.store = SiteStore.build(
+            graph, [np.unique(np.concatenate(g)) if g
+                    else np.zeros(0, np.int64) for g in folded])
+        if self.store.num_sites > 1:
+            import warnings
+            warnings.warn(
+                "SpmdEngine on a multi-device mesh matches per shard "
+                "only: results whose edges straddle devices are dropped "
+                "(exact for shard-complete fragments; cross-device joins "
+                "are not implemented yet)", UserWarning, stacklevel=2)
+        self.capacity = int(capacity)
+        self.cost = cost or CostModel()
+        self._matchers: Dict[QueryGraph, object] = {}
+        self._compiles = 0
+        self._possible_overflows = 0
+
+    @property
+    def num_sites(self) -> int:
+        return self.logical_sites
+
+    # ------------------------------------------------------------------
+    def _matcher(self, pattern: QueryGraph):
+        fn = self._matchers.get(pattern)
+        if fn is None:
+            fn = make_spmd_matcher(self.mesh, self.axis, pattern,
+                                   self.capacity)
+            self._matchers[pattern] = fn
+            self._compiles += 1
+        return fn
+
+    @staticmethod
+    def _normalization_map(query: QueryGraph) -> Dict[int, int]:
+        """original vertex id -> normalized variable id, in the same
+        traversal order as ``QueryGraph.normalize``."""
+        mapping: Dict[int, int] = {}
+        nxt = -1
+        for e in query.edges:
+            for v in (e.src, e.dst):
+                if v not in mapping:
+                    mapping[v] = nxt
+                    nxt -= 1
+        return mapping
+
+    def execute(self, query: QueryGraph) -> QueryResult:
+        if any(e.prop == PROP_VAR for e in query.edges):
+            raise NotImplementedError(
+                "SPMD matcher requires constant properties (wildcard "
+                "property labels would match the -1 padding)")
+        t0 = time.perf_counter()
+        norm = query.normalize()
+        fn = self._matcher(norm)
+        bind, valid = jax.device_get(fn(self.store.s, self.store.p,
+                                        self.store.o))
+        bind, valid = np.asarray(bind), np.asarray(valid)
+        per_dev = valid.reshape(self.store.num_sites, self.capacity)
+        if int(per_dev.sum(axis=1).max(initial=0)) >= self.capacity:
+            self._possible_overflows += 1
+        rows = bind[valid]
+        if rows.size:
+            rows = np.unique(rows, axis=0)
+        # re-apply the constants the normalization stripped
+        nmap = self._normalization_map(query)
+        col_of = {nv: i for i, nv in enumerate(pattern_var_order(norm))}
+        keep = np.ones(rows.shape[0], dtype=bool)
+        for orig, nv in nmap.items():
+            if orig >= 0:
+                keep &= rows[:, col_of[nv]] == orig
+        rows = rows[keep]
+        bindings = {orig: rows[:, col_of[nv]].astype(np.int32)
+                    for orig, nv in nmap.items() if orig < 0}
+        n = int(rows.shape[0])
+        # all_gather accounting: every device ships its table to the rest
+        m = self.store.num_sites
+        V = len(col_of)
+        comm = int(m * max(m - 1, 0) * self.capacity * (V * 4 + 1))
+        elapsed = time.perf_counter() - t0
+        stats = ExecStats(elapsed, comm, set(range(self.logical_sites)),
+                          {j: elapsed / max(m, 1) for j in range(m)}, n, 1)
+        return self._finish(query, QueryResult(bindings, n, stats))
+
+    def _stats_extra(self) -> Dict[str, float]:
+        return {"compiled_shapes": float(self._compiles),
+                "possible_overflows": float(self._possible_overflows),
+                "devices": float(self.store.num_sites)}

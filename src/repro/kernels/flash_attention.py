@@ -103,12 +103,16 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     """
     B, Hq, Sq, D = q.shape
     _, Hkv, Skv, _ = k.shape
-    assert Hq % Hkv == 0, "GQA requires Hq % Hkv == 0"
+    if Hq % Hkv != 0:
+        raise ValueError(f"GQA requires Hq % Hkv == 0, got Hq={Hq}, "
+                         f"Hkv={Hkv}")
     g = Hq // Hkv
     scale = scale if scale is not None else 1.0 / (D ** 0.5)
     bq = min(block_q, Sq)
     bk = min(block_k, Skv)
-    assert Sq % bq == 0 and Skv % bk == 0
+    if Sq % bq != 0 or Skv % bk != 0:
+        raise ValueError(f"sequence lengths must be multiples of the block "
+                         f"sizes: Sq={Sq} bq={bq}, Skv={Skv} bk={bk}")
 
     qq = q.reshape(B * Hq, Sq, D)
     kk = k.reshape(B * Hkv, Skv, D)

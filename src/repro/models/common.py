@@ -112,7 +112,9 @@ class ParamDef:
     dtype: Any = jnp.bfloat16
 
     def __post_init__(self):
-        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape/axes rank mismatch: shape={self.shape}, "
+                             f"axes={self.axes}")
 
 
 def is_def(x: Any) -> bool:

@@ -25,7 +25,9 @@ from .ssm import mamba_apply, mamba_defs, mamba_state
 
 
 def _n_blocks(cfg: ModelConfig) -> int:
-    assert cfg.num_layers % cfg.attn_every == 0
+    if cfg.num_layers % cfg.attn_every != 0:
+        raise ValueError(f"num_layers ({cfg.num_layers}) must be a multiple "
+                         f"of attn_every ({cfg.attn_every})")
     return cfg.num_layers // cfg.attn_every
 
 

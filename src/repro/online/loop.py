@@ -26,10 +26,11 @@ from typing import List, Optional, Set
 
 from ..core.allocation import Allocation, fragment_affinity
 from ..core.dictionary import DataDictionary
+from ..core.engine import EngineBase
 from ..core.executor import CostModel, DistributedEngine, QueryResult
 from ..core.fragmentation import Fragmentation
 from ..core.graph import RDFGraph
-from ..core.pipeline import PartitionConfig, WorkloadPartitioner
+from ..core.plan import PartitionConfig, PartitionPlan
 from ..core.query import QueryGraph
 from .drift import DriftDetector, DriftReport
 from .migration import (BYTES_PER_EDGE, MigrationPlan, plan_migration,
@@ -65,31 +66,48 @@ class EpochReport:
     migration_makespan_sec: float
 
 
-class AdaptiveEngine:
+class AdaptiveEngine(EngineBase):
     """Self-re-fragmenting distributed engine (control plane over
-    ``DistributedEngine``)."""
+    ``DistributedEngine``).  Takes a ``PartitionPlan`` (the legacy
+    ``WorkloadPartitioner`` is accepted via its ``.plan``)."""
 
-    def __init__(self, partitioner: WorkloadPartitioner,
+    def __init__(self, plan,
                  config: Optional[AdaptiveConfig] = None,
                  cost: Optional[CostModel] = None):
-        assert partitioner.frag is not None, "run() the partitioner first"
-        self.graph: RDFGraph = partitioner.graph
-        self.pcfg: PartitionConfig = partitioner.cfg
+        self._init_engine_base()
+        plan = getattr(plan, "plan", plan)   # legacy WorkloadPartitioner
+        if plan is None:
+            raise RuntimeError(
+                "partitioner has no plan yet -- call run() first")
+        if not isinstance(plan, PartitionPlan):
+            raise TypeError(f"expected a PartitionPlan (or a run "
+                            f"WorkloadPartitioner), got {type(plan)!r}")
+        if plan.frag is None:
+            raise ValueError(
+                f"adaptive execution needs a workload-driven plan with a "
+                f"fragment dictionary; strategy {plan.strategy!r} only "
+                f"provides site-partitioned storage")
+        if plan.design_workload is None:
+            raise ValueError("plan carries no design workload to seed the "
+                             "drift reference")
+        self.plan = plan
+        self.graph: RDFGraph = plan.graph
+        self.pcfg: PartitionConfig = plan.config
         self.cfg = config or AdaptiveConfig()
         self.cost = cost
-        self.frag: Fragmentation = partitioner.frag
-        self.alloc: Allocation = partitioner.alloc
+        self.frag: Fragmentation = plan.frag
+        self.alloc: Allocation = plan.alloc
         self.selected_patterns: List[QueryGraph] = \
-            list(partitioner.selected_patterns)
-        self.cold_props: Set[int] = set(partitioner.cold_props)
-        self.engine = partitioner.engine(cost)
+            list(plan.selected_patterns)
+        self.cold_props: Set[int] = set(plan.cold_props)
+        self.engine = plan.build_local_engine(cost)
 
         self.monitor = WorkloadMonitor(self.graph.num_properties,
                                        decay=self.cfg.decay,
                                        capacity=self.cfg.monitor_capacity)
         # seed the monitor with the design workload so the drift
         # reference reflects what the fragmentation was built from
-        self.monitor.bulk_load(partitioner.workload)
+        self.monitor.bulk_load(plan.design_workload)
         self.detector = DriftDetector(
             tv_threshold=self.cfg.tv_threshold,
             coverage_drop_threshold=self.cfg.coverage_drop_threshold,
@@ -113,8 +131,12 @@ class AdaptiveEngine:
             lambda q, r: self.monitor.observe(q))
 
     @property
-    def dict(self) -> DataDictionary:          # simulate_throughput API
+    def dict(self) -> DataDictionary:          # legacy attribute surface
         return self.engine.dict
+
+    @property
+    def num_sites(self) -> int:
+        return self.pcfg.num_sites
 
     # ------------------------------------------------------------------
     def execute(self, query: QueryGraph) -> QueryResult:
@@ -125,7 +147,12 @@ class AdaptiveEngine:
         self.total_comm_bytes += r.stats.comm_bytes
         if self._epoch_queries >= self.cfg.epoch_len:
             self.end_epoch()
-        return r
+        return self._finish(query, r)
+
+    def _stats_extra(self):
+        return {"epochs": float(self.epoch),
+                "repartitions": float(self.num_repartitions),
+                "moved_bytes": float(self.total_moved_bytes)}
 
     # ------------------------------------------------------------------
     def end_epoch(self) -> EpochReport:

@@ -38,7 +38,7 @@ from ..core.graph import RDFGraph
 from ..core.matching import _PropIndex, match_edge_ids
 from ..core.mining import (FrequentPattern, mine_frequent_patterns_deduped,
                            usage_matrix)
-from ..core.pipeline import PartitionConfig
+from ..core.plan import PartitionConfig
 from ..core.query import QueryGraph, is_subgraph_of
 from ..core.selection import select_patterns
 from .monitor import WorkloadMonitor

@@ -1,0 +1,254 @@
+"""Unified Session/PartitionPlan API: strategy registry + config
+validation, plan save/load round-trips, and engine parity -- the same
+plan and query set served through every backend of the one ``Engine``
+protocol ("local", "baseline", "spmd", "adaptive")."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (BACKENDS, PartitionConfig, PartitionPlan, Session,
+                        STRATEGIES, WorkloadPartitioner, build_plan,
+                        generate_watdiv, generate_workload,
+                        register_strategy)
+from repro.core.matching import match_pattern
+
+SPMD_CAPACITY = 65536
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    g = generate_watdiv(3_000, seed=21)
+    wl = generate_workload(g, 300, seed=22)
+    return g, wl
+
+
+@pytest.fixture(scope="module")
+def vplan(tiny):
+    g, wl = tiny
+    return build_plan(g, wl, PartitionConfig(kind="vertical", num_sites=4))
+
+
+@pytest.fixture(scope="module")
+def sample(tiny):
+    g, wl = tiny
+    qs = wl.queries[:10]
+    return qs, [match_pattern(g, q).num_rows for q in qs]
+
+
+def _session(plan, backend):
+    return Session(plan, backend=backend, spmd_capacity=SPMD_CAPACITY)
+
+
+# ----------------------------------------------------------------------
+# Config validation + strategy registry
+# ----------------------------------------------------------------------
+
+def test_config_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="registered strategies"):
+        PartitionConfig(kind="no-such-strategy")
+
+
+def test_config_error_lists_registered():
+    with pytest.raises(ValueError) as ei:
+        PartitionConfig(kind="metis")
+    for name in ("vertical", "horizontal", "shape", "warp"):
+        assert name in str(ei.value)
+
+
+def test_config_rejects_bad_num_sites():
+    with pytest.raises(ValueError, match="num_sites"):
+        PartitionConfig(num_sites=0)
+
+
+def test_registry_one_registration_adds_a_strategy(tiny):
+    g, wl = tiny
+
+    @register_strategy("test_custom")
+    def _custom(graph, workload, cfg):
+        import dataclasses
+        plan = build_plan(graph, workload,
+                          dataclasses.replace(cfg, kind="vertical"))
+        plan.strategy, plan.config = "test_custom", cfg
+        return plan
+
+    try:
+        plan = build_plan(g, wl, PartitionConfig(kind="test_custom",
+                                                 num_sites=3))
+        assert plan.frag is not None
+        assert Session(plan).execute(wl.queries[0]).num_rows == \
+            match_pattern(g, wl.queries[0]).num_rows
+    finally:
+        STRATEGIES.unregister("test_custom")
+    with pytest.raises(ValueError):
+        PartitionConfig(kind="test_custom")
+
+
+def test_partitioner_shim_raises_runtime_error_not_assert(tiny):
+    """`python -O` must not disable the run()-first guard."""
+    g, wl = tiny
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        pp = WorkloadPartitioner(g, wl)
+    with pytest.raises(RuntimeError, match="run\\(\\)"):
+        pp.engine()
+    with pytest.raises(RuntimeError):
+        _ = pp.frag
+
+
+def test_session_rejects_unknown_backend(vplan):
+    with pytest.raises(ValueError, match="backend"):
+        Session(vplan, backend="cluster")
+
+
+# ----------------------------------------------------------------------
+# Engine parity across all four backends (acceptance criterion)
+# ----------------------------------------------------------------------
+
+def test_all_backends_answer_identically(tiny, vplan, sample):
+    qs, want = sample
+    for backend in BACKENDS:
+        sess = _session(vplan, backend)
+        got = [r.num_rows for r in sess.execute_many(qs, batch_size=4)]
+        assert got == want, f"backend {backend} diverged"
+
+
+def test_local_vs_spmd_binding_multisets(tiny, vplan, sample):
+    qs, _ = sample
+    local = _session(vplan, "local")
+    spmd = _session(vplan, "spmd")
+    for q in qs[:5]:
+        rl, rs = local.execute(q), spmd.execute(q)
+        vars_ = sorted(rl.bindings)
+        assert vars_ == sorted(rs.bindings)
+        tl = {tuple(int(rl.bindings[v][i]) for v in vars_)
+              for i in range(rl.num_rows)}
+        ts = {tuple(int(rs.bindings[v][i]) for v in vars_)
+              for i in range(rs.num_rows)}
+        assert tl == ts
+
+
+def test_execute_many_matches_sequential_execute(tiny, vplan, sample):
+    qs, _ = sample
+    for backend in BACKENDS:
+        seq = [_session(vplan, backend).execute(q).num_rows for q in qs] \
+            if backend != "adaptive" else None
+        if backend == "adaptive":
+            # fresh session per run: the adaptive engine is stateful
+            seq = [r.num_rows
+                   for r in (lambda s: [s.execute(q) for q in qs])(
+                       _session(vplan, backend))]
+        batched = [r.num_rows for r in
+                   _session(vplan, backend).execute_many(qs, batch_size=3)]
+        assert batched == seq, f"backend {backend}: batched != sequential"
+
+
+def test_hooks_fire_on_every_backend(tiny, vplan, sample):
+    """Closes the ROADMAP 'SPMD-path hooks' item: post_execute_hooks is
+    part of the Engine protocol, on every backend."""
+    qs, _ = sample
+    for backend in BACKENDS:
+        sess = _session(vplan, backend)
+        seen = []
+        sess.post_execute_hooks.append(lambda q, r: seen.append(r.num_rows))
+        sess.execute_many(qs[:3])
+        assert len(seen) == 3
+
+
+def test_stats_protocol(tiny, vplan, sample):
+    qs, want = sample
+    for backend in BACKENDS:
+        sess = _session(vplan, backend)
+        sess.execute_many(qs[:4])
+        st = sess.stats()
+        assert st.queries == 4
+        assert st.result_rows == sum(want[:4])
+        assert st.backend == backend
+        assert st.strategy == "vertical"
+
+
+# ----------------------------------------------------------------------
+# Baseline-strategy plans (shape/warp) through the same protocol
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["shape", "warp"])
+def test_baseline_strategy_plans_serve_queries(tiny, sample, kind):
+    g, wl = tiny
+    qs, want = sample
+    plan = build_plan(g, wl, PartitionConfig(kind=kind, num_sites=4))
+    assert plan.baseline_frag is not None
+    for backend in ("baseline", "spmd"):
+        got = [r.num_rows
+               for r in _session(plan, backend).execute_many(qs[:6])]
+        assert got == want[:6], f"{kind}/{backend} diverged"
+    with pytest.raises(ValueError, match="backend"):
+        Session(plan, backend="local")
+    with pytest.raises(ValueError):
+        Session(plan, backend="adaptive")
+
+
+# ----------------------------------------------------------------------
+# PartitionPlan save/load round-trip (acceptance criterion)
+# ----------------------------------------------------------------------
+
+def test_plan_save_load_roundtrip(tmp_path, tiny, vplan, sample):
+    g, _ = tiny
+    qs, want = sample
+    path = vplan.save(tmp_path / "plan_v")
+    loaded = PartitionPlan.load(path, g)
+    assert loaded == vplan
+    assert loaded.stats == vplan.stats
+    # a loaded plan serves queries without re-running the offline phase
+    got = [r.num_rows for r in Session(loaded).execute_many(qs)]
+    assert got == want
+    # and feeds the adaptive backend (design workload round-tripped)
+    assert Session(loaded, backend="adaptive").execute(qs[0]).num_rows \
+        == want[0]
+
+
+def test_horizontal_plan_roundtrip_with_minterms(tmp_path, watdiv_small,
+                                                 partitioner_h):
+    """Horizontal fragments carry minterm predicates; they must survive
+    serialization (session fixture reused: 8k-triple graph)."""
+    plan = partitioner_h.plan
+    assert any(f.minterm is not None and f.minterm.terms
+               for f in plan.frag.fragments)
+    path = plan.save(tmp_path / "plan_h")
+    loaded = PartitionPlan.load(path, watdiv_small)
+    assert loaded == plan
+    from repro.core import generate_workload as gw
+    q = plan.design_workload.queries[0]
+    assert Session(loaded).execute(q).num_rows == \
+        Session(plan).execute(q).num_rows
+
+
+def test_warp_plan_roundtrip(tmp_path, tiny):
+    g, wl = tiny
+    plan = build_plan(g, wl, PartitionConfig(kind="warp", num_sites=4))
+    loaded = PartitionPlan.load(plan.save(tmp_path / "plan_w"), g)
+    assert loaded == plan
+    assert loaded.baseline_frag.name == "WARP"
+    q = wl.queries[0]
+    assert Session(loaded, "baseline").execute(q).num_rows == \
+        match_pattern(g, q).num_rows
+
+
+def test_plan_load_rejects_wrong_graph(tmp_path, tiny, vplan):
+    other = generate_watdiv(1_000, seed=99)
+    path = vplan.save(tmp_path / "plan_sig")
+    with pytest.raises(ValueError, match="different graph"):
+        PartitionPlan.load(path, other)
+
+
+def test_plan_load_rejects_same_size_different_content(tmp_path, tiny,
+                                                       vplan):
+    """Size counts alone are spoofable; the triples checksum is not."""
+    from repro.core.graph import RDFGraph
+    g, _ = tiny
+    o2 = g.o.copy()
+    o2[0], o2[1] = o2[1], o2[0]
+    twin = RDFGraph(g.s.copy(), g.p.copy(), o2,
+                    g.num_vertices, g.num_properties)
+    path = vplan.save(tmp_path / "plan_sig2")
+    with pytest.raises(ValueError, match="different graph"):
+        PartitionPlan.load(path, twin)
