@@ -174,16 +174,54 @@ def bench_engine_parity() -> None:
     want = [match_pattern(g, q).num_rows for q in sample]
     for backend in BACKENDS:
         t0 = time.perf_counter()
-        sess = Session(plan, backend=backend, spmd_capacity=65536)
+        # default SPMD capacity: the overflow auto-retry keeps the
+        # answers exact, so no need to oversize the binding tables
+        sess = Session(plan, backend=backend)
         rows = [r.num_rows for r in sess.execute_many(sample, batch_size=8)]
         dt = time.perf_counter() - t0
         emit("engine_parity", backend, "mismatches",
              sum(a != b for a, b in zip(rows, want)))
         emit("engine_parity", backend, "wall_sec", dt)
         emit("engine_parity", backend, "rows", sum(rows))
+        if backend == "spmd":
+            emit("engine_parity", backend, "capacity_retries",
+                 sess.stats().extra["capacity_retries"])
+
+
+# ----------------------------------------------------------------------
+# SPMD vs local communication cost: the same plan + sample served by the
+# host engine (ship-the-smaller-side joins along the optimized plan) and
+# by the SPMD backend (per-step all_gather broadcast joins).  Both are
+# renderings of §7.3's "ship intermediate results"; the bench records
+# their byte ledgers side by side, plus the SPMD capacity-retry
+# behaviour under the default (not oversized) binding-table capacity.
+# ----------------------------------------------------------------------
+
+def bench_spmd_comm() -> None:
+    g, wl = _setup(n_triples=8_000, n_queries=500, seed=5)
+    plan = build_plan(g, wl, PartitionConfig(kind="vertical", num_sites=4))
+    sample = wl.queries[:12]
+    want = [match_pattern(g, q).num_rows for q in sample]
+    for backend in ("local", "spmd"):
+        sess = Session(plan, backend=backend)
+        t0 = time.perf_counter()
+        rows = [r.num_rows for r in sess.execute_many(sample, batch_size=6)]
+        dt = time.perf_counter() - t0
+        st = sess.stats()
+        emit("spmd_comm", backend, "mismatches",
+             sum(a != b for a, b in zip(rows, want)))
+        emit("spmd_comm", backend, "comm_bytes", float(st.comm_bytes))
+        emit("spmd_comm", backend, "wall_sec", dt)
+        if backend == "spmd":
+            emit("spmd_comm", backend, "capacity_retries",
+                 st.extra["capacity_retries"])
+            emit("spmd_comm", backend, "overflow_events",
+                 st.extra["overflow_events"])
+            emit("spmd_comm", backend, "devices", st.extra["devices"])
 
 
 ALL = [bench_minsup, bench_throughput, bench_response, bench_scalability,
-       bench_redundancy, bench_offline, bench_queries, bench_engine_parity]
+       bench_redundancy, bench_offline, bench_queries, bench_engine_parity,
+       bench_spmd_comm]
 
 SMOKE = [bench_engine_parity]

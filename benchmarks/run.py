@@ -33,6 +33,13 @@ def main() -> None:
                          "implies --skip-roofline")
     args = ap.parse_args()
 
+    # Same default as tests/conftest.py: a 4-device host mesh, so the
+    # SPMD benches (engine parity, spmd_comm) exercise the broadcast
+    # joins and report a non-zero collective ledger.  A pinned
+    # XLA_FLAGS wins; must run before the benches import jax.
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=4")
+
     from . import adaptive, paper_benches
     from .roofline import bench_roofline
 

@@ -38,7 +38,13 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 
 @dataclasses.dataclass
 class EngineStats:
-    """Cumulative execution counters, uniform across backends."""
+    """Cumulative execution counters, uniform across backends.
+
+    ``extra`` carries backend-specific counters: named counters bumped
+    through ``EngineBase._bump`` (e.g. the SPMD backend's
+    ``capacity_retries``/``overflow_events``) merged with whatever the
+    backend's ``_stats_extra`` reports (``compiled_shapes``,
+    ``devices``, ...)."""
     queries: int = 0
     result_rows: int = 0
     comm_bytes: int = 0
@@ -74,6 +80,13 @@ class EngineBase:
         self._n_rows = 0
         self._n_comm_bytes = 0
         self._t_response = 0.0
+        self._counters: Dict[str, float] = {}
+
+    def _bump(self, name: str, amount: float = 1.0) -> None:
+        """Accumulate a named backend counter; all counters surface in
+        ``stats().extra``.  Bump with ``amount=0`` at construction to
+        pre-register a counter so it is present even before it fires."""
+        self._counters[name] = self._counters.get(name, 0.0) + amount
 
     # ------------------------------------------------------------------
     def _finish(self, query: "QueryGraph", result: "QueryResult"
@@ -105,9 +118,11 @@ class EngineBase:
 
     # ------------------------------------------------------------------
     def stats(self) -> EngineStats:
+        extra = dict(self._counters)
+        extra.update(self._stats_extra())
         return EngineStats(self._n_queries, self._n_rows,
                            self._n_comm_bytes, self._t_response,
-                           extra=self._stats_extra())
+                           extra=extra)
 
     def _stats_extra(self) -> Dict[str, float]:
         return {}

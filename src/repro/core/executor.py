@@ -11,11 +11,11 @@ Two engines share one planner (Algorithms 3+4):
   bytes) into simulated wall-clock, giving the response-time/throughput
   benchmarks their numbers (§8.3-8.5).
 
-* ``execute_spmd`` -- the jit/shard_map SPMD engine: sites = devices on
-  a ``sites`` mesh axis, fragments resident per-shard, fixed-capacity
-  binding tables, Pallas probe kernels in the match loop, and
-  ``all_gather``-based broadcast joins (DESIGN.md §3).  On CPU it runs
-  on 1 device; the production meshes are exercised by the dry-run.
+* ``SpmdEngine`` (``core/spmd.py``) -- the jit/shard_map SPMD engine:
+  sites = devices on a ``sites`` mesh axis, fragments resident
+  per-shard, fixed-capacity binding tables with overflow auto-retry,
+  Pallas probe kernels in the match loop, and ``all_gather``-based
+  broadcast joins (DESIGN.md §3) -- exact on any mesh width.
 """
 from __future__ import annotations
 

@@ -271,12 +271,14 @@ class PartitionPlan:
 
     def build_spmd_engine(self, mesh=None, axis: str = "sites",
                           capacity: int = 4096,
-                          cost: Optional[CostModel] = None):
+                          cost: Optional[CostModel] = None,
+                          max_capacity: Optional[int] = None):
         if self.graph is None:
             raise RuntimeError("plan has no attached graph")
         from .spmd import SpmdEngine   # lazy: keeps jax off the plan path
         return SpmdEngine(self.graph, self.site_edge_ids(), mesh=mesh,
-                          axis=axis, capacity=capacity, cost=cost)
+                          axis=axis, capacity=capacity, cost=cost,
+                          max_capacity=max_capacity)
 
     # -- serialization (built on repro.checkpoint) ----------------------
     def save(self, path) -> Path:

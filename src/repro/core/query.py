@@ -78,42 +78,34 @@ class QueryGraph:
         return len(seen) == len(vs)
 
     # ------------------------------------------------------------------
+    def normalization_map(self) -> Dict[int, int]:
+        """Original vertex id -> normalized variable id, in edge/endpoint
+        traversal order.  THE canonical traversal: ``normalize`` and
+        ``constant_bindings`` are defined in terms of it, and the SPMD
+        engine uses it to re-apply constants after matching a normalized
+        pattern -- one implementation, no lockstep copies."""
+        mapping: Dict[int, int] = {}
+        nxt = -1
+        for e in self.edges:
+            for v in (e.src, e.dst):
+                if v not in mapping:
+                    mapping[v] = nxt
+                    nxt -= 1
+        return mapping
+
     def normalize(self) -> "QueryGraph":
         """§4: replace every constant subject/object with a fresh variable
         (generalized representation).  Properties are kept -- they are the
         labels the whole technique keys on.  FILTERs were never modeled."""
-        mapping: Dict[int, int] = {}
-        nxt = [-1]
-
-        def var_of(v: int) -> int:
-            if v < 0:
-                if v not in mapping:
-                    mapping[v] = nxt[0]
-                    nxt[0] -= 1
-                return mapping[v]
-            if v not in mapping:
-                mapping[v] = nxt[0]
-                nxt[0] -= 1
-            return mapping[v]
-
-        return QueryGraph(tuple(QueryEdge(var_of(e.src), var_of(e.dst), e.prop)
+        m = self.normalization_map()
+        return QueryGraph(tuple(QueryEdge(m[e.src], m[e.dst], e.prop)
                                 for e in self.edges))
 
     def constant_bindings(self) -> Dict[int, int]:
         """Map normalized-variable id -> original constant (for minterm
-        predicate mining, §5.2).  Uses the same traversal order as
-        ``normalize`` so variable ids line up."""
-        mapping: Dict[int, int] = {}
-        nxt = [-1]
-        out: Dict[int, int] = {}
-        for e in self.edges:
-            for v in (e.src, e.dst):
-                if v not in mapping:
-                    mapping[v] = nxt[0]
-                    nxt[0] -= 1
-                    if v >= 0:
-                        out[mapping[v]] = v
-        return out
+        predicate mining, §5.2)."""
+        return {nv: v for v, nv in self.normalization_map().items()
+                if v >= 0}
 
     # ------------------------------------------------------------------
     def canonical_code(self) -> Tuple:

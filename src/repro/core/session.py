@@ -10,7 +10,9 @@ through the identical ``Engine`` protocol:
 * ``"baseline"`` -- the gather-all ``BaselineEngine`` over the plan's
                     per-site storage (SHAPE/WARP execution model);
 * ``"spmd"``     -- the jit/shard_map ``SpmdEngine`` (sites = mesh
-                    devices, fixed-capacity binding tables);
+                    devices, fixed-capacity binding tables with
+                    cross-device broadcast joins and transparent
+                    capacity-doubling retry on overflow);
 * ``"adaptive"`` -- the online ``AdaptiveEngine`` control plane
                     (monitor -> drift -> refragment -> migrate) wrapping
                     the local engine.
@@ -48,7 +50,8 @@ class Session:
                  cost: Optional[CostModel] = None,
                  adaptive_config=None,
                  mesh=None, spmd_axis: str = "sites",
-                 spmd_capacity: int = 4096):
+                 spmd_capacity: int = 4096,
+                 spmd_max_capacity: Optional[int] = None):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"choose one of {list(BACKENDS)}")
@@ -60,7 +63,8 @@ class Session:
             self.engine = plan.build_baseline_engine(cost)
         elif backend == "spmd":
             self.engine = plan.build_spmd_engine(
-                mesh=mesh, axis=spmd_axis, capacity=spmd_capacity, cost=cost)
+                mesh=mesh, axis=spmd_axis, capacity=spmd_capacity, cost=cost,
+                max_capacity=spmd_max_capacity)
         else:  # adaptive
             # lazy import: repro.online imports repro.core, not vice versa
             from ..online.loop import AdaptiveEngine

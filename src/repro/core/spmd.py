@@ -2,26 +2,41 @@
 
 This is the TPU-native rendering of the paper's online phase (§7.3):
 every site holds its allocated fragments as dense, predicate-sorted edge
-tables; a subquery runs as the *same* program on every site over its
-local shard (shard_map), producing fixed-capacity binding tables; joins
-across subqueries gather the smaller side (``all_gather`` broadcast
-join, DESIGN.md §3).
+tables; the query runs as the *same* program on every site over its
+local shard (shard_map), producing fixed-capacity binding tables.
+
+Multi-device exactness comes from the broadcast join: before every join
+step the (small, fixed-capacity) binding tables are ``all_gather``-ed
+across the mesh axis, deduplicated, and expanded against each device's
+*local* edge table -- the paper's "ship intermediate results" step, so a
+match whose edges straddle devices is assembled exactly (the same
+shard-local-match-then-exchange discipline as AdPart's semi-join
+evaluation and TriAD's inter-node joins).  The edge tables never move;
+only binding tables do (the smaller side, DESIGN.md §3).
 
 Shapes are static everywhere (capacity + valid-count), so the whole
 query plan jits and the production-mesh dry-run can lower/compile it.
-The blocked probe kernels from repro.kernels drive the expansion steps.
+Overflow of a binding table is *counted in-trace* and returned per
+device; ``SpmdEngine`` transparently re-executes with doubled capacity
+(geometric, compile cached per capacity tier) until the answer is exact
+or ``max_capacity`` is hit, which raises instead of truncating.
+
+The expansion probes (join multiplicities per binding row) run through
+the blocked Pallas kernels in ``repro.kernels`` on TPU, with the
+``kernels.ref`` jnp oracles as the CPU fallback
+(``REPRO_SPMD_PALLAS=1/0`` overrides the backend-based default).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
+import os
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..kernels import ref as kref
 from .engine import EngineBase
@@ -96,23 +111,64 @@ def _edge_table_for_prop(s: jax.Array, p: jax.Array, o: jax.Array,
     return keys[order], o[order]
 
 
+def _use_pallas_probes() -> bool:
+    """Pallas probe kernels on TPU; jnp oracles elsewhere.  The env knob
+    ``REPRO_SPMD_PALLAS`` forces the choice (tests exercise the kernel
+    path in interpret mode on CPU through it)."""
+    env = os.environ.get("REPRO_SPMD_PALLAS")
+    if env is not None:
+        return env not in ("0", "false", "")
+    return jax.default_backend() == "tpu"
+
+
+def _probe_counts(probe: jax.Array, keys_sorted: jax.Array) -> jax.Array:
+    """Join multiplicity of each probe key in a sorted key column -- the
+    expansion-size probe of the match loop.  Blocked Pallas ``join_count``
+    kernel (jit-safe static block plan) on TPU, ``kernels.ref`` oracle on
+    CPU.  Sentinel table rows (INT32_MAX) never equal a real vertex id."""
+    if _use_pallas_probes():
+        from ..kernels.ops import join_count
+        return join_count(probe, keys_sorted, jit_safe=True)
+    return kref.join_count_ref(probe, keys_sorted)
+
+
+def _probe_pair_member(q_s: jax.Array, q_o: jax.Array,
+                       t_s: jax.Array, t_o: jax.Array) -> jax.Array:
+    """(q_s[i], q_o[i]) present among the table's (s, o) pairs?  The
+    cycle-close probe: exact int32 pair membership (no 42-bit key
+    composition, which would need the x64 mode jax disables by default).
+    Blocked Pallas ``pair_semijoin`` on TPU, merge-rank oracle on CPU."""
+    if _use_pallas_probes():
+        from ..kernels.ops import pair_semijoin
+        return pair_semijoin(q_s, q_o, t_s, t_o, jit_safe=True)
+    return kref.pair_semijoin_ref(q_s, q_o, t_s, t_o)
+
+
 def _expand_fixed(bind: jax.Array, valid: jax.Array, col_vals: jax.Array,
-                  keys_sorted: jax.Array, payload: jax.Array,
-                  capacity: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                  keys_sorted: jax.Array, payload: jax.Array, capacity: int
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Join-expand a binding table against a sorted (keys -> payload)
     edge table with a fixed output capacity.
 
-    bind: (C, V) int32; valid: (C,) bool; col_vals: (C,) probe keys.
-    Returns (new_bind (C', V), new_payload_col (C',), new_valid (C',))
-    where C' = capacity.  Overflow rows are dropped (counted upstream).
-    """
+    bind: (C, V) int32 (C need not equal capacity -- after a broadcast
+    gather it is num_devices * capacity); valid: (C,) bool; col_vals:
+    (C,) probe keys.  Returns (new_bind (capacity, V), new_payload_col,
+    new_valid, overflow) where overflow is the number of result rows
+    that did NOT fit (int32 scalar, 0 when exact)."""
     C, V = bind.shape
     probe = jnp.where(valid, col_vals, jnp.iinfo(jnp.int32).max)
     lo = jnp.searchsorted(keys_sorted, probe, side="left")
-    hi = jnp.searchsorted(keys_sorted, probe, side="right")
-    cnt = jnp.where(valid, hi - lo, 0)
+    cnt = jnp.where(valid, _probe_counts(probe, keys_sorted), 0)
+    cnt = cnt.astype(jnp.int32)
+    # int32 cumsum can wrap past 2^31 total expansion rows and defeat
+    # the overflow check (x64 is off, so no int64).  sum(cnt) cannot
+    # wrap iff every cnt <= (2^31-1)/C; a larger cnt is treated as a
+    # (conservative) overflow so the retry ladder -- not silent
+    # truncation -- handles it.
+    wrap_risk = (jnp.max(cnt, initial=0) > (2 ** 31 - 1) // max(C, 1)
+                 if C else jnp.bool_(False))
     start = jnp.cumsum(cnt) - cnt                     # output offsets
-    total = start[-1] + cnt[-1] if C else 0
+    total = start[-1] + cnt[-1] if C else jnp.int32(0)
     # inverse map: output slot t -> source row r
     t = jnp.arange(capacity)
     r = jnp.searchsorted(start, t, side="right") - 1
@@ -122,15 +178,54 @@ def _expand_fixed(bind: jax.Array, valid: jax.Array, col_vals: jax.Array,
     src = jnp.clip(lo[r] + k, 0, keys_sorted.shape[0] - 1)
     new_col = jnp.where(ok, payload[src], -1)
     new_bind = jnp.where(ok[:, None], bind[r], -1)
-    return new_bind, new_col, ok
+    over = jnp.maximum(total - capacity, 0).astype(jnp.int32)
+    over = jnp.where(wrap_risk, jnp.int32(capacity + 1), over)
+    return new_bind, new_col, ok, over
 
 
-def pattern_var_order(pattern: QueryGraph) -> List[int]:
-    """Binding-table column order produced by ``local_match`` for this
-    pattern -- the same bookkeeping, host-side, without tracing."""
+def _dedup_padded(bind: jax.Array, valid: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Invalidate duplicate rows of a padded binding table (exact:
+    column-wise lexsort + adjacent compare; no hashing).  Rows come back
+    sorted -- row order never matters downstream.  After an all_gather
+    the same partial match can arrive from several devices (replicated
+    fragments); deduping before expansion keeps capacity pressure at the
+    number of *distinct* partial matches."""
+    C, V = bind.shape
+    if V == 0:
+        keep = jnp.zeros_like(valid).at[0].set(valid.any())
+        return bind, keep
+    keys = tuple(bind[:, v] for v in range(V - 1, -1, -1)) \
+        + ((~valid).astype(jnp.int32),)
+    order = jnp.lexsort(keys)                  # invalid rows sort last
+    bs, vs = bind[order], valid[order]
+    dup = jnp.zeros((C,), bool).at[1:].set(
+        jnp.all(bs[1:] == bs[:-1], axis=1) & vs[1:] & vs[:-1])
+    keep = vs & ~dup
+    return jnp.where(keep[:, None], bs, -1), keep
+
+
+def _compress_rows(bind: jax.Array, keep: jax.Array, capacity: int
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Pack the rows selected by ``keep`` into a fresh capacity-row
+    table.  Returns (bind, valid, overflow-row-count)."""
+    idx = jnp.nonzero(keep, size=capacity, fill_value=-1)[0]
+    valid = idx >= 0
+    idxc = jnp.clip(idx, 0, bind.shape[0] - 1)
+    out = jnp.where(valid[:, None], bind[idxc], -1)
+    over = jnp.maximum(keep.sum() - capacity, 0).astype(jnp.int32)
+    return out, valid, over
+
+
+def _var_col_trace(pattern: QueryGraph) -> Tuple[List[int], List[int]]:
+    """Host-side replay of ``_match_shard``'s column bookkeeping, without
+    tracing.  Returns (final binding-column order, #columns entering each
+    join step >= 1) -- the latter sizes the per-step broadcast-join
+    gathers for the comm ledger."""
     order = _connected_edge_order(pattern)
     edges = pattern.edges
     var_cols: List[int] = []
+    step_in_cols: List[int] = []
     for step, ei in enumerate(order):
         e = edges[ei]
         if step == 0:
@@ -139,6 +234,7 @@ def pattern_var_order(pattern: QueryGraph) -> List[int]:
             if e.dst < 0 and e.dst != e.src:
                 var_cols.append(e.dst)
             continue
+        step_in_cols.append(len(var_cols))
         s_known = e.src >= 0 or e.src in var_cols
         d_known = e.dst >= 0 or e.dst in var_cols
         if s_known and d_known:
@@ -149,16 +245,35 @@ def pattern_var_order(pattern: QueryGraph) -> List[int]:
         else:
             if e.src < 0:
                 var_cols.append(e.src)
-    return var_cols
+    return var_cols, step_in_cols
 
 
-def local_match(s: jax.Array, p: jax.Array, o: jax.Array,
-                pattern: QueryGraph, capacity: int
-                ) -> Tuple[jax.Array, jax.Array, List[int]]:
-    """All matches of ``pattern`` over one site's edge table, padded to
-    ``capacity`` rows.  Returns (bindings (capacity, V), valid, var_order).
+def pattern_var_order(pattern: QueryGraph) -> List[int]:
+    """Binding-table column order produced by ``_match_shard`` for this
+    pattern -- the same bookkeeping, host-side, without tracing."""
+    return _var_col_trace(pattern)[0]
 
-    jit-friendly: static pattern, static capacity.
+
+def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
+                 pattern: QueryGraph, capacity: int,
+                 axis: Optional[str] = None
+                 ) -> Tuple[jax.Array, jax.Array, List[int], jax.Array]:
+    """Match ``pattern`` over one shard's edge table, padded to
+    ``capacity`` rows.  Returns (bindings (capacity, V), valid,
+    var_order, overflow-row-count).
+
+    With ``axis`` set (inside shard_map) every join step is a broadcast
+    join: the current binding tables are all_gather-ed across the mesh
+    axis, deduplicated, and expanded against THIS shard's edges -- so a
+    partial match discovered on any device can pick up its next edge
+    wherever that edge lives.  The union over devices of the step's
+    outputs is then exactly the set of partial matches of the first
+    step+1 pattern edges against the whole (distributed) graph.  With
+    ``axis=None`` the loop is purely shard-local (single-device case;
+    identical math, gathers skipped).
+
+    jit-friendly: static pattern, static capacity; overflow (result rows
+    beyond capacity at any step) is counted, not silently dropped.
     """
     order = _connected_edge_order(pattern)
     edges = pattern.edges
@@ -169,6 +284,7 @@ def local_match(s: jax.Array, p: jax.Array, o: jax.Array,
 
     bind = jnp.full((capacity, 0), -1, jnp.int32)
     valid = jnp.zeros((capacity,), bool)
+    ovf = jnp.int32(0)
 
     for step, ei in enumerate(order):
         e = edges[ei]
@@ -177,7 +293,7 @@ def local_match(s: jax.Array, p: jax.Array, o: jax.Array,
         d_known = e.dst >= 0 or e.dst in var_cols
 
         if step == 0:
-            # initialize from the property's edge list
+            # initialize from the property's local edge list
             sel = (p == e.prop)
             if e.src >= 0:
                 sel &= s == e.src
@@ -187,6 +303,8 @@ def local_match(s: jax.Array, p: jax.Array, o: jax.Array,
                 sel &= s == o
             idx = jnp.nonzero(sel, size=capacity, fill_value=-1)[0]
             valid = idx >= 0
+            ovf = jnp.maximum(
+                ovf, sel.sum().astype(jnp.int32) - capacity)
             idxc = jnp.clip(idx, 0, s.shape[0] - 1)
             cols = []
             if e.src < 0:
@@ -199,29 +317,39 @@ def local_match(s: jax.Array, p: jax.Array, o: jax.Array,
                     else jnp.zeros((capacity, 0), jnp.int32)).astype(jnp.int32)
             continue
 
+        if axis is not None:
+            # broadcast join: ship every device's binding table (the
+            # small side -- edge tables stay resident), drop duplicates
+            # from replicated fragments, expand against local edges.
+            bind = jax.lax.all_gather(bind, axis, tiled=True)
+            valid = jax.lax.all_gather(valid, axis, tiled=True)
+            bind, valid = _dedup_padded(bind, valid)
+        nrows = bind.shape[0]   # capacity, or num_devices * capacity
+
         if s_known and d_known:
-            sv = (jnp.full((capacity,), e.src, jnp.int32) if e.src >= 0
+            sv = (jnp.full((nrows,), e.src, jnp.int32) if e.src >= 0
                   else bind[:, col_idx(e.src)])
-            dv = (jnp.full((capacity,), e.dst, jnp.int32) if e.dst >= 0
+            dv = (jnp.full((nrows,), e.dst, jnp.int32) if e.dst >= 0
                   else bind[:, col_idx(e.dst)])
-            # membership of (sv, dv) among this property's edges:
-            # key-compose and probe the composed sorted table
-            nv = jnp.int64(2) ** 21  # vertex ids < 2^21 (enforced upstream)
-            pair_keys = jnp.sort(jnp.where(keys < jnp.iinfo(jnp.int32).max,
-                                           keys.astype(jnp.int64) * nv +
-                                           payload.astype(jnp.int64),
-                                           jnp.iinfo(jnp.int64).max))
-            probes = sv.astype(jnp.int64) * nv + dv.astype(jnp.int64)
-            pos = jnp.clip(jnp.searchsorted(pair_keys, probes), 0,
-                           pair_keys.shape[0] - 1)
-            hit = pair_keys[pos] == probes
-            valid = valid & hit
-            bind = jnp.where(valid[:, None], bind, -1)
+            # membership of (sv, dv) among this property's local edges
+            # (cycle close).  Sentinel rows (INT32_MAX, INT32_MAX) never
+            # equal a real id pair; invalid probe rows are masked below.
+            sel = p == e.prop
+            t_s = jnp.where(sel, s, jnp.iinfo(jnp.int32).max)
+            t_o = jnp.where(sel, o, jnp.iinfo(jnp.int32).max)
+            keep = valid & _probe_pair_member(sv, dv, t_s, t_o)
+            if axis is None:
+                valid = keep
+                bind = jnp.where(valid[:, None], bind, -1)
+            else:   # gathered rows: pack the survivors back to capacity
+                bind, valid, over = _compress_rows(bind, keep, capacity)
+                ovf = jnp.maximum(ovf, over)
         elif s_known:
-            sv = (jnp.full((capacity,), e.src, jnp.int32) if e.src >= 0
+            sv = (jnp.full((nrows,), e.src, jnp.int32) if e.src >= 0
                   else bind[:, col_idx(e.src)])
-            bind, new_col, valid = _expand_fixed(bind, valid, sv, keys,
-                                                 payload, capacity)
+            bind, new_col, valid, over = _expand_fixed(
+                bind, valid, sv, keys, payload, capacity)
+            ovf = jnp.maximum(ovf, over)
             if e.dst < 0:
                 var_cols.append(e.dst)
                 bind = jnp.concatenate([bind, new_col[:, None]], axis=1)
@@ -233,10 +361,11 @@ def local_match(s: jax.Array, p: jax.Array, o: jax.Array,
             okeys = jnp.where(sel, o, jnp.iinfo(jnp.int32).max)
             oorder = jnp.argsort(okeys)
             okeys_s, opayload = okeys[oorder], s[oorder]
-            dv = (jnp.full((capacity,), e.dst, jnp.int32) if e.dst >= 0
+            dv = (jnp.full((nrows,), e.dst, jnp.int32) if e.dst >= 0
                   else bind[:, col_idx(e.dst)])
-            bind, new_col, valid = _expand_fixed(bind, valid, dv, okeys_s,
-                                                 opayload, capacity)
+            bind, new_col, valid, over = _expand_fixed(
+                bind, valid, dv, okeys_s, opayload, capacity)
+            ovf = jnp.maximum(ovf, over)
             if e.src < 0:
                 var_cols.append(e.src)
                 bind = jnp.concatenate([bind, new_col[:, None]], axis=1)
@@ -244,7 +373,16 @@ def local_match(s: jax.Array, p: jax.Array, o: jax.Array,
                 valid = valid & (new_col == e.src)
                 bind = jnp.where(valid[:, None], bind, -1)
 
-    return bind, valid, var_cols
+    return bind, valid, var_cols, jnp.maximum(ovf, 0)
+
+
+def local_match(s: jax.Array, p: jax.Array, o: jax.Array,
+                pattern: QueryGraph, capacity: int
+                ) -> Tuple[jax.Array, jax.Array, List[int]]:
+    """Shard-local matching (no collectives): compatibility wrapper over
+    ``_match_shard`` returning (bindings, valid, var_order)."""
+    bind, valid, cols, _ovf = _match_shard(s, p, o, pattern, capacity)
+    return bind, valid, cols
 
 
 # ----------------------------------------------------------------------
@@ -271,20 +409,33 @@ def compat_shard_map(fn, mesh, in_specs, out_specs):
 def make_spmd_matcher(mesh: Mesh, axis: str, pattern: QueryGraph,
                       capacity: int):
     """Build a jitted SPMD function: site-sharded (s,p,o) -> gathered
-    binding tables (num_sites * capacity, V) + validity mask.
+    binding tables (num_sites * capacity, V), validity mask, and the
+    per-device overflow row count (num_sites,).
 
-    The all_gather is the paper's 'ship intermediate results' step;
-    its bytes are what the §Roofline collective term counts.
+    Every join step inside ``_match_shard`` broadcast-joins the binding
+    tables (all_gather of the smaller side -- the paper's 'ship
+    intermediate results' step); those bytes are what the §Roofline
+    collective term counts.  A non-zero overflow entry means that
+    device's table filled and the caller must retry at a higher
+    capacity for an exact answer.
     """
+    # on a 1-device mesh the per-step gathers are identity and the
+    # gathered dedup can never find anything (folded site groups are
+    # unique'd at store build) -- skip both, keeping the shard-local
+    # fast path; the mesh size is static at trace time.
+    step_axis = axis if int(np.prod(mesh.devices.shape)) > 1 else None
+
     def per_site(s, p, o):
-        bind, valid, cols = local_match(s[0], p[0], o[0], pattern, capacity)
+        bind, valid, cols, ovf = _match_shard(s[0], p[0], o[0], pattern,
+                                              capacity, axis=step_axis)
         g_bind = jax.lax.all_gather(bind, axis, tiled=True)
         g_valid = jax.lax.all_gather(valid, axis, tiled=True)
-        return g_bind, g_valid
+        g_ovf = jax.lax.all_gather(ovf[None], axis, tiled=True)
+        return g_bind, g_valid, g_ovf
 
     fn = compat_shard_map(per_site, mesh,
                           (P(axis, None), P(axis, None), P(axis, None)),
-                          (P(), P()))
+                          (P(), P(), P()))
     return jax.jit(fn)
 
 
@@ -293,7 +444,7 @@ def spmd_match(store: SiteStore, mesh: Mesh, axis: str,
                ) -> Tuple[np.ndarray, List[int]]:
     """Run the SPMD matcher and return deduped host-side bindings."""
     fn = make_spmd_matcher(mesh, axis, pattern, capacity)
-    bind, valid = jax.device_get(fn(store.s, store.p, store.o))
+    bind, valid, _ovf = jax.device_get(fn(store.s, store.p, store.o))
     cols = pattern_var_order(pattern)
     rows = bind[np.asarray(valid)]
     if rows.size:
@@ -311,28 +462,32 @@ class SpmdEngine(EngineBase):
     Logical sites are folded round-robin onto the mesh devices (on a
     1-device CPU host everything lands in one shard; overlap across
     folded sites is removed by the final dedup, so answers stay exact).
+    Beyond one device, every join step broadcast-joins the binding
+    tables (``_match_shard`` with the mesh axis), so matches whose edges
+    straddle devices are assembled exactly -- the SPMD backend answers
+    identically to the exact host engine on any mesh.
+
     Queries are matched *whole* as one SPMD program; constants are
     normalized out of the compiled pattern and re-applied as a host-side
-    filter, so the jit cache is keyed by query **shape** -- a workload
-    of thousands of template-instantiated queries compiles once per
-    template, and the cache persists across ``execute``/``execute_many``
-    calls for the engine's lifetime.
+    filter, so the jit cache is keyed by query **shape** x **capacity
+    tier** -- a workload of thousands of template-instantiated queries
+    compiles once per template (per tier), and the cache persists across
+    ``execute``/``execute_many`` calls for the engine's lifetime.
 
-    ``capacity`` bounds the per-device binding table; when a device
-    fills its table the result may be truncated -- tracked in
-    ``stats().extra["possible_overflows"]``.
-
-    Limitation: ``local_match`` joins only within a device's shard, so
-    with more than one device a match whose edges straddle shards is
-    missed (cross-device broadcast joins are a ROADMAP item).  Hot
-    (FAP) fragments are shard-complete by construction, but multi-edge
-    *cold* queries can straddle round-robin cold fragments -- a
-    UserWarning is raised at construction on multi-device meshes.
+    ``capacity`` bounds the per-device binding table.  Overflow is
+    counted in-trace; on overflow the query transparently re-executes
+    with doubled capacity (at most log2(max_capacity/capacity)
+    recompiles, each cached) until exact.  If ``max_capacity`` is still
+    not enough, a ``RuntimeError`` is raised -- never a silently
+    truncated answer.  ``stats().extra`` reports ``capacity_retries``
+    (re-executions at a higher tier) and ``overflow_events`` (attempts
+    that overflowed).
     """
 
     def __init__(self, graph: RDFGraph, site_edge_ids: Sequence[np.ndarray],
                  mesh: Optional[Mesh] = None, axis: str = "sites",
-                 capacity: int = 4096, cost: Optional[CostModel] = None):
+                 capacity: int = 4096, cost: Optional[CostModel] = None,
+                 max_capacity: Optional[int] = None):
         self._init_engine_base()
         self.graph = graph
         self.logical_sites = len(site_edge_ids)
@@ -347,45 +502,66 @@ class SpmdEngine(EngineBase):
         self.store = SiteStore.build(
             graph, [np.unique(np.concatenate(g)) if g
                     else np.zeros(0, np.int64) for g in folded])
-        if self.store.num_sites > 1:
-            import warnings
-            warnings.warn(
-                "SpmdEngine on a multi-device mesh matches per shard "
-                "only: results whose edges straddle devices are dropped "
-                "(exact for shard-complete fragments; cross-device joins "
-                "are not implemented yet)", UserWarning, stacklevel=2)
         self.capacity = int(capacity)
+        self.max_capacity = max(int(max_capacity) if max_capacity is not None
+                                else max(self.capacity, 1 << 20),
+                                self.capacity)
         self.cost = cost or CostModel()
-        self._matchers: Dict[QueryGraph, object] = {}
+        # keyed by exact edge structure (NOT QueryGraph, whose __eq__ is
+        # canonical-isomorphism: isomorphic patterns with different edge
+        # orders produce different binding-column orders and must not
+        # share a compiled matcher) x capacity tier
+        self._matchers: Dict[Tuple[Tuple, int], object] = {}
+        # last capacity tier that answered this edge structure exactly:
+        # repeat queries start the retry ladder there instead of
+        # re-climbing (and re-executing) every lower tier
+        self._cap_hints: Dict[Tuple, int] = {}
         self._compiles = 0
-        self._possible_overflows = 0
+        self._bump("capacity_retries", 0)
+        self._bump("overflow_events", 0)
 
     @property
     def num_sites(self) -> int:
         return self.logical_sites
 
     # ------------------------------------------------------------------
-    def _matcher(self, pattern: QueryGraph):
-        fn = self._matchers.get(pattern)
+    def _matcher(self, pattern: QueryGraph, capacity: int):
+        key = (pattern.edges, capacity)
+        fn = self._matchers.get(key)
         if fn is None:
-            fn = make_spmd_matcher(self.mesh, self.axis, pattern,
-                                   self.capacity)
-            self._matchers[pattern] = fn
+            fn = make_spmd_matcher(self.mesh, self.axis, pattern, capacity)
+            self._matchers[key] = fn
             self._compiles += 1
         return fn
 
-    @staticmethod
-    def _normalization_map(query: QueryGraph) -> Dict[int, int]:
-        """original vertex id -> normalized variable id, in the same
-        traversal order as ``QueryGraph.normalize``."""
-        mapping: Dict[int, int] = {}
-        nxt = -1
-        for e in query.edges:
-            for v in (e.src, e.dst):
-                if v not in mapping:
-                    mapping[v] = nxt
-                    nxt -= 1
-        return mapping
+    def _run_exact(self, norm: QueryGraph) -> Tuple[np.ndarray, np.ndarray,
+                                                    List[int]]:
+        """Execute the matcher for a normalized pattern, geometrically
+        doubling the binding-table capacity until no device overflows.
+        Returns (bindings, valid, capacities attempted -- last one
+        succeeded).  Raises RuntimeError if ``max_capacity`` is still
+        too small -- a truncated answer is never returned."""
+        cap = self._cap_hints.get(norm.edges, self.capacity)
+        caps: List[int] = []
+        while True:
+            caps.append(cap)
+            fn = self._matcher(norm, cap)
+            bind, valid, ovf = jax.device_get(
+                fn(self.store.s, self.store.p, self.store.o))
+            if int(np.max(np.asarray(ovf), initial=0)) <= 0:
+                self._cap_hints[norm.edges] = cap
+                return np.asarray(bind), np.asarray(valid), caps
+            self._bump("overflow_events")
+            if cap >= self.max_capacity:
+                raise RuntimeError(
+                    f"SPMD binding tables still overflow at max_capacity="
+                    f"{cap} rows per device (started at {self.capacity}) "
+                    f"for pattern {norm.edges}; refusing to return a "
+                    f"truncated answer.  Raise Session(spmd_capacity=...)"
+                    f"/spmd_max_capacity (or SpmdEngine capacity/"
+                    f"max_capacity) for this workload.")
+            cap = min(cap * 2, self.max_capacity)
+            self._bump("capacity_retries")
 
     def execute(self, query: QueryGraph) -> QueryResult:
         if any(e.prop == PROP_VAR for e in query.edges):
@@ -394,19 +570,14 @@ class SpmdEngine(EngineBase):
                 "property labels would match the -1 padding)")
         t0 = time.perf_counter()
         norm = query.normalize()
-        fn = self._matcher(norm)
-        bind, valid = jax.device_get(fn(self.store.s, self.store.p,
-                                        self.store.o))
-        bind, valid = np.asarray(bind), np.asarray(valid)
-        per_dev = valid.reshape(self.store.num_sites, self.capacity)
-        if int(per_dev.sum(axis=1).max(initial=0)) >= self.capacity:
-            self._possible_overflows += 1
+        bind, valid, caps = self._run_exact(norm)
         rows = bind[valid]
         if rows.size:
             rows = np.unique(rows, axis=0)
         # re-apply the constants the normalization stripped
-        nmap = self._normalization_map(query)
-        col_of = {nv: i for i, nv in enumerate(pattern_var_order(norm))}
+        nmap = query.normalization_map()
+        var_order, step_in_cols = _var_col_trace(norm)
+        col_of = {nv: i for i, nv in enumerate(var_order)}
         keep = np.ones(rows.shape[0], dtype=bool)
         for orig, nv in nmap.items():
             if orig >= 0:
@@ -415,16 +586,24 @@ class SpmdEngine(EngineBase):
         bindings = {orig: rows[:, col_of[nv]].astype(np.int32)
                     for orig, nv in nmap.items() if orig < 0}
         n = int(rows.shape[0])
-        # all_gather accounting: every device ships its table to the rest
+        # all_gather accounting: each broadcast-join step ships every
+        # device's binding table (cols at that step, plus the valid
+        # byte) to the other m-1 devices; the final gather ships the
+        # full-width table once more.  Overflowed attempts really ran
+        # their gathers on device, so every attempted tier is counted.
         m = self.store.num_sites
         V = len(col_of)
-        comm = int(m * max(m - 1, 0) * self.capacity * (V * 4 + 1))
+        comm = 0
+        for cap in caps:
+            per_dev = int(m * max(m - 1, 0) * cap)
+            comm += sum(per_dev * (c * 4 + 1) for c in step_in_cols)
+            comm += per_dev * (V * 4 + 1)
         elapsed = time.perf_counter() - t0
-        stats = ExecStats(elapsed, comm, set(range(self.logical_sites)),
+        stats = ExecStats(elapsed, int(comm),
+                          set(range(self.logical_sites)),
                           {j: elapsed / max(m, 1) for j in range(m)}, n, 1)
         return self._finish(query, QueryResult(bindings, n, stats))
 
     def _stats_extra(self) -> Dict[str, float]:
         return {"compiled_shapes": float(self._compiles),
-                "possible_overflows": float(self._possible_overflows),
                 "devices": float(self.store.num_sites)}

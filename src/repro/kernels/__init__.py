@@ -3,11 +3,12 @@
 Kernels (each: <name>.py kernel body, ops.py jit wrapper, ref.py oracle):
   semijoin        -- blocked sort-merge membership probe (match hot loop)
   semijoin(count) -- join multiplicity counting (expansion offsets)
+  pair_semijoin   -- (s, o) pair membership (SPMD cycle-close probe)
   flash_attention -- causal/SWA/GQA blocked attention (LM stack)
 
 Validated on CPU via interpret=True; compiled natively on TPU.
 """
-from .ops import attention, join_count, semijoin
+from .ops import attention, join_count, pair_semijoin, semijoin
 from . import ref
 
-__all__ = ["attention", "join_count", "semijoin", "ref"]
+__all__ = ["attention", "join_count", "pair_semijoin", "semijoin", "ref"]

@@ -15,7 +15,7 @@ import numpy as np
 
 from . import ref
 from .flash_attention import flash_attention
-from .semijoin import BM, BN, semijoin_blocks
+from .semijoin import BM, BN, pair_semijoin_blocks, semijoin_blocks
 
 INT32_MAX = np.iinfo(np.int32).max
 
@@ -32,26 +32,28 @@ def _interpret_default(interpret: Optional[bool]) -> bool:
 # Semi-join membership / join count
 # ----------------------------------------------------------------------
 
-def _prep_blocks(queries: jax.Array, table_sorted: jax.Array,
-                 bm: int, bn: int):
-    """Sort+pad the query side, pad the table, compute the block plan.
+def _pad_tail(x: jax.Array, mult: int) -> jax.Array:
+    """Pad to a multiple of ``mult`` with the INT32_MAX sentinel (sorts
+    last; never equals a real vertex id, which are < 2^21)."""
+    pad = (-x.shape[0]) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.full((pad,), INT32_MAX, x.dtype)])
+    return x
 
-    The plan (first overlapping table block per query block, max overlap
-    width) is data-dependent metadata computed on host -- the paper's
-    control-site role.  The heavy compare runs in the kernel.
+
+def _block_plan_1d(qs_p: jax.Array, ts_p: jax.Array, bm: int, bn: int,
+                   jit_safe: bool):
+    """Block plan on one sorted+padded key column: first overlapping
+    table block per query block, per-block overlap widths, and the
+    static inner-grid extent.
+
+    The plan is data-dependent metadata computed on host -- the paper's
+    control-site role; the heavy compare runs in the kernel.
+    ``jit_safe=True`` skips the host sync on the max overlap width so
+    the op traces inside jit/shard_map (the SPMD match loop): the inner
+    grid then statically spans every table block, with non-overlapping
+    steps skipped by the kernel's width guard.
     """
-    order = jnp.argsort(queries)
-    qs = queries[order]
-    nq = qs.shape[0]
-    pad_q = (-nq) % bm
-    qs_p = jnp.concatenate([qs, jnp.full((pad_q,), INT32_MAX, qs.dtype)]) \
-        if pad_q else qs
-    nt = table_sorted.shape[0]
-    pad_t = (-nt) % bn
-    ts_p = jnp.concatenate([table_sorted,
-                            jnp.full((pad_t,), INT32_MAX, table_sorted.dtype)]) \
-        if pad_t else table_sorted
-
     nqb = qs_p.shape[0] // bm
     ntb = ts_p.shape[0] // bn
     qmin = qs_p[::bm]
@@ -61,20 +63,42 @@ def _prep_blocks(queries: jax.Array, table_sorted: jax.Array,
           // bn).astype(jnp.int32)
     lo = jnp.minimum(lo, ntb - 1)
     widths = jnp.maximum(hi - lo + 1, 1).astype(jnp.int32)
-    width = int(jax.device_get(jnp.max(widths))) if nqb else 1
+    if jit_safe:
+        width = ntb                   # static worst case, no host sync
+    else:
+        width = int(jax.device_get(jnp.max(widths))) if nqb else 1
+    return lo, widths, max(width, 1)
+
+
+def _prep_blocks(queries: jax.Array, table_sorted: jax.Array,
+                 bm: int, bn: int, jit_safe: bool = False):
+    """Sort+pad the query side, pad the table, compute the block plan
+    (see ``_block_plan_1d``)."""
+    order = jnp.argsort(queries)
+    qs = queries[order]
+    nq = qs.shape[0]
+    qs_p = _pad_tail(qs, bm)
+    ts_p = _pad_tail(table_sorted, bn)
+    nqb = qs_p.shape[0] // bm
+    ntb = ts_p.shape[0] // bn
+    lo, widths, width = _block_plan_1d(qs_p, ts_p, bm, bn, jit_safe)
     return (order, qs_p.reshape(nqb, bm), ts_p.reshape(ntb, bn), lo, widths,
-            max(width, 1), nq)
+            width, nq)
 
 
 def semijoin(queries: jax.Array, table_sorted: jax.Array,
              interpret: Optional[bool] = None,
-             bm: int = BM, bn: int = BN) -> jax.Array:
-    """Boolean mask: queries[i] present in sorted table.  Kernel-backed."""
+             bm: int = BM, bn: int = BN,
+             jit_safe: bool = False) -> jax.Array:
+    """Boolean mask: queries[i] present in sorted table.  Kernel-backed.
+    ``jit_safe=True`` makes the op traceable inside jit (static block
+    plan, see ``_prep_blocks``)."""
     queries = queries.astype(jnp.int32)
     table_sorted = table_sorted.astype(jnp.int32)
     if queries.shape[0] == 0 or table_sorted.shape[0] == 0:
         return jnp.zeros(queries.shape, dtype=bool)
-    order, q2d, t2d, lo, widths, width, nq = _prep_blocks(queries, table_sorted, bm, bn)
+    order, q2d, t2d, lo, widths, width, nq = _prep_blocks(
+        queries, table_sorted, bm, bn, jit_safe=jit_safe)
     got = semijoin_blocks(q2d, t2d, lo, widths, width, count=False,
                           interpret=_interpret_default(interpret))
     mask_sorted = got.reshape(-1)[:nq] > 0
@@ -84,18 +108,57 @@ def semijoin(queries: jax.Array, table_sorted: jax.Array,
 
 def join_count(queries: jax.Array, table_sorted: jax.Array,
                interpret: Optional[bool] = None,
-               bm: int = BM, bn: int = BN) -> jax.Array:
-    """counts[i] = multiplicity of queries[i] in the sorted table."""
+               bm: int = BM, bn: int = BN,
+               jit_safe: bool = False) -> jax.Array:
+    """counts[i] = multiplicity of queries[i] in the sorted table.
+    ``jit_safe=True`` makes the op traceable inside jit (static block
+    plan, see ``_prep_blocks``)."""
     queries = queries.astype(jnp.int32)
     table_sorted = table_sorted.astype(jnp.int32)
     if queries.shape[0] == 0 or table_sorted.shape[0] == 0:
         return jnp.zeros(queries.shape, dtype=jnp.int32)
-    order, q2d, t2d, lo, widths, width, nq = _prep_blocks(queries, table_sorted, bm, bn)
+    order, q2d, t2d, lo, widths, width, nq = _prep_blocks(
+        queries, table_sorted, bm, bn, jit_safe=jit_safe)
     got = semijoin_blocks(q2d, t2d, lo, widths, width, count=True,
                           interpret=_interpret_default(interpret))
     cnt_sorted = got.reshape(-1)[:nq]
     inv = jnp.zeros_like(order).at[order].set(jnp.arange(nq))
     return cnt_sorted[inv]
+
+
+def pair_semijoin(q_s: jax.Array, q_o: jax.Array,
+                  t_s: jax.Array, t_o: jax.Array,
+                  interpret: Optional[bool] = None,
+                  bm: int = BM, bn: int = BN,
+                  jit_safe: bool = False) -> jax.Array:
+    """mask[i] = any table row r with (t_s[r], t_o[r]) == (q_s[i], q_o[i]).
+
+    Neither side needs to be pre-sorted (both are lexsorted internally;
+    the block plan overlaps on the subject column).  This is the
+    cycle-close probe of the SPMD match loop: an exact int32 pair
+    membership with no 42-bit key composition, so it runs with jax's
+    default x64-disabled config.  ``jit_safe=True`` as in ``semijoin``.
+    """
+    q_s, q_o = q_s.astype(jnp.int32), q_o.astype(jnp.int32)
+    t_s, t_o = t_s.astype(jnp.int32), t_o.astype(jnp.int32)
+    if q_s.shape[0] == 0 or t_s.shape[0] == 0:
+        return jnp.zeros(q_s.shape, dtype=bool)
+    torder = jnp.lexsort((t_o, t_s))
+    ts, to = _pad_tail(t_s[torder], bn), _pad_tail(t_o[torder], bn)
+    qorder = jnp.lexsort((q_o, q_s))
+    qs, qo = _pad_tail(q_s[qorder], bm), _pad_tail(q_o[qorder], bm)
+    nq = q_s.shape[0]
+    nqb, ntb = qs.shape[0] // bm, ts.shape[0] // bn
+    # plan on the subject column alone: both sides lexsorted by (s, o),
+    # so a query block's candidate table rows lie in its subject span
+    lo, widths, width = _block_plan_1d(qs, ts, bm, bn, jit_safe)
+    got = pair_semijoin_blocks(qs.reshape(nqb, bm), qo.reshape(nqb, bm),
+                               ts.reshape(ntb, bn), to.reshape(ntb, bn),
+                               lo, widths, width,
+                               interpret=_interpret_default(interpret))
+    mask_sorted = got.reshape(-1)[:nq] > 0
+    inv = jnp.zeros_like(qorder).at[qorder].set(jnp.arange(nq))
+    return mask_sorted[inv]
 
 
 # ----------------------------------------------------------------------

@@ -36,6 +36,35 @@ def join_count_ref(left_keys: jax.Array, table_sorted: jax.Array) -> jax.Array:
 
 
 # ----------------------------------------------------------------------
+# Pair semi-join membership: (q_s, q_o) ∈ table pairs?  (the cycle-close
+# probe of the SPMD match loop; int32-safe -- no 42-bit key composition)
+# ----------------------------------------------------------------------
+
+def pair_semijoin_ref(q_s: jax.Array, q_o: jax.Array,
+                      t_s: jax.Array, t_o: jax.Array) -> jax.Array:
+    """mask[i] = any table row r with (t_s[r], t_o[r]) == (q_s[i], q_o[i]).
+
+    Neither side needs to be sorted.  Exact O((T+Q) log(T+Q)) merge:
+    lexsort the concatenation with table rows ordered before equal query
+    rows, then each query row hits iff the nearest preceding table row
+    carries the same pair."""
+    T, Q = t_s.shape[0], q_s.shape[0]
+    if T == 0 or Q == 0:
+        return jnp.zeros(q_s.shape, bool)
+    cs = jnp.concatenate([t_s, q_s]).astype(jnp.int32)
+    co = jnp.concatenate([t_o, q_o]).astype(jnp.int32)
+    flag = jnp.concatenate([jnp.zeros(T, jnp.int32), jnp.ones(Q, jnp.int32)])
+    order = jnp.lexsort((flag, co, cs))
+    fs, fo, ff = cs[order], co[order], flag[order]
+    idx = jnp.arange(T + Q)
+    last_tab = jax.lax.cummax(jnp.where(ff == 0, idx, -1))
+    lt = jnp.clip(last_tab, 0, T + Q - 1)
+    hit_sorted = (ff == 1) & (last_tab >= 0) & (fs[lt] == fs) & (fo[lt] == fo)
+    out = jnp.zeros(T + Q, bool).at[order].set(hit_sorted)
+    return out[T:]
+
+
+# ----------------------------------------------------------------------
 # Flash attention (causal, optional sliding window, GQA)
 # ----------------------------------------------------------------------
 

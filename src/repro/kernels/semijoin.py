@@ -75,6 +75,29 @@ def _count_kernel(first_blk_ref, width_ref, q_ref, t_ref, o_ref,
         o_ref[0, :] += eq.sum(axis=1)
 
 
+def _pair_kernel(first_blk_ref, width_ref, qs_ref, qo_ref, ts_ref, to_ref,
+                 o_ref, *, nsteps: int):
+    """Pair membership: query (s, o) pairs vs table (s, o) pairs, both
+    lexsorted by (s, o); the block plan overlaps on the subject column.
+    Two dense equality compares ANDed on the VPU per (BM, BN) step."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(j < width_ref[i])
+    def _compute():
+        qs = qs_ref[0, :]
+        qo = qo_ref[0, :]
+        ts = ts_ref[0, :]
+        to = to_ref[0, :]
+        eq = (qs[:, None] == ts[None, :]) & (qo[:, None] == to[None, :])
+        hit = eq.any(axis=1).astype(jnp.int32)
+        o_ref[0, :] = jnp.maximum(o_ref[0, :], hit)
+
+
 def _block_plan(queries_sorted: jax.Array, table: jax.Array,
                 bm: int, bn: int) -> Tuple[jax.Array, int]:
     """First overlapping table block per query block + overlap width.
@@ -130,3 +153,35 @@ def semijoin_blocks(queries_2d: jax.Array, table_2d: jax.Array,
         out_shape=jax.ShapeDtypeStruct((nqb, bm), jnp.int32),
         interpret=interpret,
     )(first_blk, widths, queries_2d, table_2d)
+
+
+def pair_semijoin_blocks(qs_2d: jax.Array, qo_2d: jax.Array,
+                         ts_2d: jax.Array, to_2d: jax.Array,
+                         first_blk: jax.Array, widths: jax.Array,
+                         nsteps: int, interpret: bool = True) -> jax.Array:
+    """Run the blocked pair-membership kernel.
+
+    qs/qo: (nq_blocks, BM) query pairs lexsorted by (s, o), INT32_MAX
+    padded; ts/to: (nt_blocks, BN) table pairs likewise.  first_blk /
+    widths: subject-column block plan (see ``_block_plan``)."""
+    nqb, bm = qs_2d.shape
+    ntb, bn = ts_2d.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nqb, nsteps),
+        in_specs=[
+            pl.BlockSpec((1, bm), lambda i, j, fb, wd: (i, 0)),
+            pl.BlockSpec((1, bm), lambda i, j, fb, wd: (i, 0)),
+            pl.BlockSpec((1, bn),
+                         lambda i, j, fb, wd: (jnp.minimum(fb[i] + j, ntb - 1), 0)),
+            pl.BlockSpec((1, bn),
+                         lambda i, j, fb, wd: (jnp.minimum(fb[i] + j, ntb - 1), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm), lambda i, j, fb, wd: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_pair_kernel, nsteps=nsteps),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nqb, bm), jnp.int32),
+        interpret=interpret,
+    )(first_blk, widths, qs_2d, qo_2d, ts_2d, to_2d)

@@ -1,8 +1,17 @@
+import os
+
 import numpy as np
 import pytest
 
-# NOTE: no XLA_FLAGS here on purpose -- smoke tests and benches must see
-# ONE device; only launch/dryrun.py forces 512 placeholder devices.
+# Simulate a 4-device host mesh so the multi-device SPMD paths
+# (broadcast joins, overflow retry, logical-site folding) are exercised
+# by the default test run.  Must happen before any jax import, which is
+# why it lives at conftest top level.  An externally pinned XLA_FLAGS
+# wins -- CI runs the suite twice (1 device and 4 devices), and
+# launch/dryrun.py still forces 512 placeholder devices in its own
+# subprocess.
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 
 
 @pytest.fixture(scope="session")

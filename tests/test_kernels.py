@@ -5,9 +5,10 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import attention, join_count, ref, semijoin
+from repro.kernels import attention, join_count, pair_semijoin, ref, semijoin
 
 RNG = np.random.default_rng(42)
+INT32_MAX = np.iinfo(np.int32).max
 
 
 @pytest.mark.parametrize("m,n", [(1, 1), (7, 3), (100, 1000), (1000, 100),
@@ -40,6 +41,119 @@ def test_semijoin_empty():
         == (0,)
     assert not bool(semijoin(jnp.zeros(5, jnp.int32),
                              jnp.zeros(0, jnp.int32)).any())
+
+
+# ----------------------------------------------------------------------
+# Padded (sentinel) inputs: the SPMD match loop feeds tables padded with
+# -1 (SiteStore) / INT32_MAX (sorted-key sentinel); kernel and oracle
+# must agree bit-for-bit on them.
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("fill", [-1, INT32_MAX])
+def test_semijoin_and_count_padded_sentinel_parity(fill):
+    """-1 (SiteStore padding) is an ordinary key on both sides;
+    INT32_MAX is the ops' reserved block-padding sentinel -- legal as
+    table padding but never a real probe (vertex ids < 2^21), so the
+    query side only carries it in the -1 case."""
+    real = RNG.integers(0, 300, size=700).astype(np.int32)
+    table = np.sort(np.concatenate([real, np.full(345, fill, np.int32)]))
+    queries = RNG.integers(0, 400, size=500).astype(np.int32)
+    if fill == -1:
+        queries = np.concatenate([queries, np.full(77, fill, np.int32)])
+    for op, oracle in ((semijoin, ref.semijoin_mask_ref),
+                       (join_count, ref.join_count_ref)):
+        got = np.asarray(op(jnp.asarray(queries), jnp.asarray(table)))
+        want = np.asarray(oracle(jnp.asarray(queries), jnp.asarray(table)))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_semijoin_all_padding_table():
+    """Sorted-key sentinel rows (INT32_MAX) never match a real id; an
+    all-(-1) padded table matches exactly the -1 probes."""
+    queries = RNG.integers(0, 100, size=600).astype(np.int32)
+    sent = np.full(1000, INT32_MAX, np.int32)
+    assert not bool(np.asarray(semijoin(jnp.asarray(queries),
+                                        jnp.asarray(sent))).any())
+    neg = np.full(1000, -1, np.int32)
+    got = np.asarray(semijoin(jnp.asarray(queries), jnp.asarray(neg)))
+    np.testing.assert_array_equal(got, queries == -1)
+    cnt = np.asarray(join_count(jnp.full(3, -1, jnp.int32),
+                                jnp.asarray(neg)))
+    np.testing.assert_array_equal(cnt, np.full(3, 1000, np.int32))
+
+
+@pytest.mark.parametrize("m,n", [(1, 1), (100, 1000), (513, 1025),
+                                 (3000, 2000)])
+def test_pair_semijoin_sweep(m, n):
+    t_s = RNG.integers(0, 60, size=n).astype(np.int32)
+    t_o = RNG.integers(0, 60, size=n).astype(np.int32)
+    q_s = RNG.integers(0, 70, size=m).astype(np.int32)
+    q_o = RNG.integers(0, 70, size=m).astype(np.int32)
+    got = np.asarray(pair_semijoin(jnp.asarray(q_s), jnp.asarray(q_o),
+                                   jnp.asarray(t_s), jnp.asarray(t_o)))
+    want = np.asarray(ref.pair_semijoin_ref(jnp.asarray(q_s),
+                                            jnp.asarray(q_o),
+                                            jnp.asarray(t_s),
+                                            jnp.asarray(t_o)))
+    np.testing.assert_array_equal(got, want)
+    # spot-check the oracle itself against brute force
+    pairs = {(int(a), int(b)) for a, b in zip(t_s, t_o)}
+    brute = np.array([(int(a), int(b)) in pairs for a, b in zip(q_s, q_o)])
+    np.testing.assert_array_equal(want, brute)
+
+
+def test_pair_semijoin_padded_and_empty():
+    t_s = np.concatenate([RNG.integers(0, 50, 400).astype(np.int32),
+                          np.full(112, INT32_MAX, np.int32)])
+    t_o = np.concatenate([RNG.integers(0, 50, 400).astype(np.int32),
+                          np.full(112, INT32_MAX, np.int32)])
+    q_s = RNG.integers(0, 50, 300).astype(np.int32)
+    q_o = RNG.integers(0, 50, 300).astype(np.int32)
+    got = np.asarray(pair_semijoin(jnp.asarray(q_s), jnp.asarray(q_o),
+                                   jnp.asarray(t_s), jnp.asarray(t_o)))
+    want = np.asarray(ref.pair_semijoin_ref(jnp.asarray(q_s),
+                                            jnp.asarray(q_o),
+                                            jnp.asarray(t_s),
+                                            jnp.asarray(t_o)))
+    np.testing.assert_array_equal(got, want)
+    # empty table / empty queries
+    assert not bool(pair_semijoin(jnp.asarray(q_s), jnp.asarray(q_o),
+                                  jnp.zeros(0, jnp.int32),
+                                  jnp.zeros(0, jnp.int32)).any())
+    assert pair_semijoin(jnp.zeros(0, jnp.int32), jnp.zeros(0, jnp.int32),
+                         jnp.asarray(t_s), jnp.asarray(t_o)).shape == (0,)
+
+
+def test_probe_kernels_jit_safe_inside_jit():
+    """The SPMD match loop calls the probe ops inside jit/shard_map:
+    jit_safe=True must trace (static block plan, no host sync) and still
+    agree with the oracles."""
+    table = np.sort(RNG.integers(0, 500, size=1200).astype(np.int32))
+    queries = RNG.integers(0, 600, size=800).astype(np.int32)
+    t_s = RNG.integers(0, 40, size=900).astype(np.int32)
+    t_o = RNG.integers(0, 40, size=900).astype(np.int32)
+
+    @jax.jit
+    def probes(q, t, ps, po):
+        return (semijoin(q, t, jit_safe=True),
+                join_count(q, t, jit_safe=True),
+                pair_semijoin(q, q, ps, po, jit_safe=True))
+
+    mask, cnt, pair = probes(jnp.asarray(queries), jnp.asarray(table),
+                             jnp.asarray(t_s), jnp.asarray(t_o))
+    np.testing.assert_array_equal(
+        np.asarray(mask),
+        np.asarray(ref.semijoin_mask_ref(jnp.asarray(queries),
+                                         jnp.asarray(table))))
+    np.testing.assert_array_equal(
+        np.asarray(cnt),
+        np.asarray(ref.join_count_ref(jnp.asarray(queries),
+                                      jnp.asarray(table))))
+    np.testing.assert_array_equal(
+        np.asarray(pair),
+        np.asarray(ref.pair_semijoin_ref(
+            jnp.asarray(queries), jnp.asarray(queries),
+            jnp.asarray(t_s), jnp.asarray(t_o))))
 
 
 ATTN_CASES = [
