@@ -22,7 +22,8 @@ the one ``Engine`` protocol over every backend ("local", "baseline",
 from .graph import RDFGraph, example_graph, generate_watdiv
 from .query import QueryGraph, is_subgraph_of, find_embedding
 from .workload import (Workload, generate_workload, watdiv_templates,
-                       generate_drifting_workload, class_template_probs)
+                       generate_drifting_workload, class_template_probs,
+                       make_shape_queries)
 from .mining import (FrequentPattern, mine_frequent_patterns,
                      frequent_properties, usage_matrix)
 from .selection import SelectionResult, select_patterns
@@ -48,6 +49,7 @@ __all__ = [
     "QueryGraph", "is_subgraph_of", "find_embedding",
     "Workload", "generate_workload", "watdiv_templates",
     "generate_drifting_workload", "class_template_probs",
+    "make_shape_queries",
     "FrequentPattern", "mine_frequent_patterns", "frequent_properties",
     "usage_matrix", "SelectionResult", "select_patterns",
     "Fragment", "Fragmentation", "build_fragmentation",

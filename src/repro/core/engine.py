@@ -40,11 +40,17 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 class EngineStats:
     """Cumulative execution counters, uniform across backends.
 
-    ``extra`` carries backend-specific counters: named counters bumped
-    through ``EngineBase._bump`` (e.g. the SPMD backend's
-    ``capacity_retries``/``overflow_events``) merged with whatever the
-    backend's ``_stats_extra`` reports (``compiled_shapes``,
-    ``devices``, ...)."""
+    Attributes:
+        queries: queries executed through this engine.
+        result_rows: total result rows returned.
+        comm_bytes: total data-plane bytes shipped between sites
+            (intermediate binding rows / edge rows; control scalars are
+            not ledgered).
+        response_time: summed per-query response time (seconds).
+        backend / strategy: provenance, stamped by ``Session.stats()``.
+        extra: backend-specific counters -- see ``EngineBase.stats``
+            for the catalogue of keys.
+    """
     queries: int = 0
     result_rows: int = 0
     comm_bytes: int = 0
@@ -56,19 +62,28 @@ class EngineStats:
 
 @runtime_checkable
 class Engine(Protocol):
-    """Structural type every execution backend satisfies."""
+    """Structural type every execution backend satisfies (see the
+    module docstring for the contract semantics)."""
 
     post_execute_hooks: List[Callable[["QueryGraph", "QueryResult"], None]]
 
     @property
-    def num_sites(self) -> int: ...
+    def num_sites(self) -> int:
+        """Logical cluster width."""
+        ...
 
-    def execute(self, query: "QueryGraph") -> "QueryResult": ...
+    def execute(self, query: "QueryGraph") -> "QueryResult":
+        """Answer one query exactly."""
+        ...
 
     def execute_many(self, queries: Sequence["QueryGraph"],
-                     batch_size: int = 64) -> List["QueryResult"]: ...
+                     batch_size: int = 64) -> List["QueryResult"]:
+        """Answer a stream in batches; results in input order."""
+        ...
 
-    def stats(self) -> EngineStats: ...
+    def stats(self) -> EngineStats:
+        """Cumulative counters since construction."""
+        ...
 
 
 class EngineBase:
@@ -118,6 +133,45 @@ class EngineBase:
 
     # ------------------------------------------------------------------
     def stats(self) -> EngineStats:
+        """Cumulative counters since construction.
+
+        ``extra`` merges the named counters bumped through ``_bump``
+        with the backend's ``_stats_extra``.  Keys by backend (the
+        single catalogue -- backends document behaviour, this documents
+        the counters):
+
+        SPMD (``SpmdEngine``):
+            ``capacity_retries``    -- re-executions at a doubled
+            binding-table capacity tier after an overflow;
+            ``overflow_events``     -- attempts whose binding table
+            overflowed on some device;
+            ``compiled_shapes``     -- distinct (pattern shape x
+            capacity tier) programs jitted;
+            ``devices``             -- mesh devices the logical sites
+            folded onto;
+            ``comm_planner``        -- 1.0 when size-aware
+            communication planning is on;
+            ``gather_steps``        -- join steps that shipped the
+            binding tables (all_gather + dedup);
+            ``edge_shipped_steps``  -- join steps that shipped the
+            property's edge rows instead (bindings outweighed them);
+            ``skipped_gathers``     -- join steps that shipped nothing
+            (property shard-complete on every device);
+            ``comm_bytes_saved``    -- ledger bytes avoided by the
+            planner's edge-ship decisions vs. always gathering.
+            The four step counters (like ``comm_bytes``) account
+            *inter-device* shipping only: on a 1-device mesh no join
+            step has peers to ship to or skip, so all stay 0.
+
+        Adaptive (``AdaptiveEngine``):
+            ``epochs`` -- closed epochs; ``repartitions`` -- re-mine +
+            migrate cycles fired; ``moved_bytes`` -- fragment bytes
+            migrated in total.
+
+        Returns:
+            An ``EngineStats`` snapshot (``backend``/``strategy`` are
+            stamped by ``Session.stats()``).
+        """
         extra = dict(self._counters)
         extra.update(self._stats_extra())
         return EngineStats(self._n_queries, self._n_rows,
@@ -125,4 +179,7 @@ class EngineBase:
                            extra=extra)
 
     def _stats_extra(self) -> Dict[str, float]:
+        """Backend hook: derived gauge values merged into
+        ``stats().extra`` on read (counters proper go through
+        ``_bump``)."""
         return {}

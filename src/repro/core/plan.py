@@ -63,15 +63,20 @@ class StrategyRegistry:
         self._builders: Dict[str, Callable[..., "PartitionPlan"]] = {}
 
     def register(self, name: str) -> Callable:
+        """Decorator registering a plan builder under ``name`` (making
+        it a valid ``PartitionConfig.kind``)."""
         def deco(fn: Callable[..., "PartitionPlan"]) -> Callable:
             self._builders[name] = fn
             return fn
         return deco
 
     def unregister(self, name: str) -> None:
+        """Remove ``name`` from the registry (no-op if absent)."""
         self._builders.pop(name, None)
 
     def get(self, name: str) -> Callable[..., "PartitionPlan"]:
+        """The builder registered under ``name``; raises ``ValueError``
+        listing the registered strategies otherwise."""
         if name not in self._builders:
             raise ValueError(
                 f"unknown fragmentation strategy {name!r}; registered "
@@ -79,6 +84,7 @@ class StrategyRegistry:
         return self._builders[name]
 
     def names(self) -> List[str]:
+        """Registered strategy names, sorted."""
         return sorted(self._builders)
 
     def __contains__(self, name: str) -> bool:
@@ -96,6 +102,10 @@ register_strategy = STRATEGIES.register
 
 @dataclasses.dataclass
 class PartitionConfig:
+    """Offline-phase knobs: strategy choice (``kind`` must name a
+    registered strategy -- validated at construction), cluster width
+    (``num_sites``), and the paper's mining/selection thresholds (the
+    inline comments cite the sections)."""
     min_sup_fraction: float = 0.001   # minSup as a fraction of |Q| (§8.2)
     theta_fraction: float = 0.001     # hot-property threshold (Def. 5)
     storage_factor: float = 1.6       # SC = factor * |E(hot)| (§4.1.2)
@@ -118,6 +128,9 @@ class PartitionConfig:
 
 @dataclasses.dataclass
 class OfflineStats:
+    """Timing + quality provenance of one offline run (mine/select/
+    fragment/allocate seconds, pattern and fragment counts, redundancy
+    ratio, workload hit rate, selection Benefit)."""
     mine_sec: float
     select_sec: float
     fragment_sec: float
@@ -136,6 +149,7 @@ class OfflineStats:
 # ----------------------------------------------------------------------
 
 def encode_queries(queries: Sequence[QueryGraph]) -> np.ndarray:
+    """Flatten query graphs into the int64 stream format above."""
     out: List[int] = []
     for q in queries:
         out.append(q.num_edges)
@@ -145,6 +159,7 @@ def encode_queries(queries: Sequence[QueryGraph]) -> np.ndarray:
 
 
 def decode_queries(flat: np.ndarray) -> List[QueryGraph]:
+    """Inverse of ``encode_queries``."""
     flat = np.asarray(flat, dtype=np.int64)
     qs: List[QueryGraph] = []
     i = 0
@@ -216,9 +231,12 @@ class PartitionPlan:
     # -- basic facts ----------------------------------------------------
     @property
     def num_sites(self) -> int:
+        """Logical cluster width the plan allocates over."""
         return self.config.num_sites
 
     def redundancy_ratio(self) -> float:
+        """Stored triples / graph triples (>= 1; overlap between
+        fragments is the paper's storage-for-communication trade)."""
         if self.graph is None:
             raise RuntimeError("plan has no attached graph")
         if self.frag is not None:
@@ -247,6 +265,21 @@ class PartitionPlan:
     # -- engine construction (the Session facade picks per backend) -----
     def build_local_engine(self, cost: Optional[CostModel] = None
                            ) -> DistributedEngine:
+        """Build the exact host ``DistributedEngine`` (decompose ->
+        match per site -> ship-smaller-side joins, Algorithms 3+4).
+
+        Args:
+            cost: optional ``CostModel`` for the timing/byte ledger.
+
+        Returns:
+            A ready ``DistributedEngine``.
+
+        Raises:
+            RuntimeError: no graph attached.
+            ValueError: the strategy produced site-partitioned storage
+                only (no fragment dictionary) -- use ``"baseline"`` or
+                ``"spmd"``.
+        """
         if self.graph is None:
             raise RuntimeError("plan has no attached graph")
         if self.frag is None or self.alloc is None or self.dictionary is None:
@@ -259,6 +292,16 @@ class PartitionPlan:
 
     def build_baseline_engine(self, cost: Optional[CostModel] = None
                               ) -> BaselineEngine:
+        """Build the gather-all ``BaselineEngine`` over the plan's
+        per-site storage (the SHAPE/WARP execution model; WARP plans
+        keep their local patterns).
+
+        Args:
+            cost: optional ``CostModel`` for the timing/byte ledger.
+
+        Returns:
+            A ready ``BaselineEngine``.
+        """
         if self.graph is None:
             raise RuntimeError("plan has no attached graph")
         if self.baseline_frag is not None:
@@ -272,13 +315,34 @@ class PartitionPlan:
     def build_spmd_engine(self, mesh=None, axis: str = "sites",
                           capacity: int = 4096,
                           cost: Optional[CostModel] = None,
-                          max_capacity: Optional[int] = None):
+                          max_capacity: Optional[int] = None,
+                          comm_plan: bool = True):
+        """Build the jit/shard_map ``SpmdEngine`` over this plan's
+        per-site storage.
+
+        Args:
+            mesh: jax device mesh (default: a host mesh over all
+                devices); logical sites are folded round-robin onto it.
+            axis: mesh axis name the sites shard over.
+            capacity: starting per-device binding-table rows (doubled
+                transparently on overflow).
+            cost: optional ``CostModel`` (timing/ledger constants).
+            max_capacity: retry-ladder ceiling; overflow past it raises
+                instead of truncating.
+            comm_plan: size-aware per-join-step communication planning
+                (ship the smaller of bindings vs. edge rows, skip
+                shard-complete steps); ``False`` gathers binding tables
+                before every join step.
+
+        Returns:
+            A ready ``SpmdEngine`` (implements the ``Engine`` protocol).
+        """
         if self.graph is None:
             raise RuntimeError("plan has no attached graph")
         from .spmd import SpmdEngine   # lazy: keeps jax off the plan path
         return SpmdEngine(self.graph, self.site_edge_ids(), mesh=mesh,
                           axis=axis, capacity=capacity, cost=cost,
-                          max_capacity=max_capacity)
+                          max_capacity=max_capacity, comm_plan=comm_plan)
 
     # -- serialization (built on repro.checkpoint) ----------------------
     def save(self, path) -> Path:
@@ -570,6 +634,22 @@ def _warp(graph: RDFGraph, workload: Workload,
 
 def build_plan(graph: RDFGraph, workload: Workload,
                config: Optional[PartitionConfig] = None) -> PartitionPlan:
-    """Run the offline phase with the strategy named by ``config.kind``."""
+    """Run the offline phase with the strategy named by ``config.kind``.
+
+    Args:
+        graph: the RDF graph to fragment (triples as int32 columns).
+        workload: the design query workload the fragmentation is mined
+            from.
+        config: ``PartitionConfig`` (strategy kind, number of sites,
+            mining/selection thresholds); defaults to vertical
+            fragmentation over 10 sites.
+
+    Returns:
+        A ``PartitionPlan`` with the graph attached -- ready to serve
+        through ``Session`` or to ``save()`` for later ``load()``.
+
+    Raises:
+        ValueError: ``config.kind`` names no registered strategy.
+    """
     cfg = config or PartitionConfig()
     return STRATEGIES.get(cfg.kind)(graph, workload, cfg)

@@ -51,7 +51,30 @@ class Session:
                  adaptive_config=None,
                  mesh=None, spmd_axis: str = "sites",
                  spmd_capacity: int = 4096,
-                 spmd_max_capacity: Optional[int] = None):
+                 spmd_max_capacity: Optional[int] = None,
+                 spmd_comm_plan: bool = True):
+        """Build the backend engine for ``plan``.
+
+        Args:
+            plan: the ``PartitionPlan`` to serve (graph attached).
+            backend: one of ``BACKENDS`` -- ``"local"`` / ``"baseline"``
+                / ``"spmd"`` / ``"adaptive"``.
+            cost: optional ``CostModel`` shared by every backend's
+                timing / communication ledger.
+            adaptive_config: ``AdaptiveConfig`` for the adaptive
+                backend (epoch length, drift thresholds, budget).
+            mesh: jax device mesh for the spmd backend.
+            spmd_axis: mesh axis name sites shard over.
+            spmd_capacity: starting per-device binding-table rows.
+            spmd_max_capacity: overflow retry-ladder ceiling.
+            spmd_comm_plan: size-aware per-join-step communication
+                planning (default on); ``False`` = naive gather of the
+                binding tables before every join step.
+
+        Raises:
+            ValueError: unknown backend name, or a plan that cannot
+                serve the requested backend.
+        """
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"choose one of {list(BACKENDS)}")
@@ -64,7 +87,7 @@ class Session:
         elif backend == "spmd":
             self.engine = plan.build_spmd_engine(
                 mesh=mesh, axis=spmd_axis, capacity=spmd_capacity, cost=cost,
-                max_capacity=spmd_max_capacity)
+                max_capacity=spmd_max_capacity, comm_plan=spmd_comm_plan)
         else:  # adaptive
             # lazy import: repro.online imports repro.core, not vice versa
             from ..online.loop import AdaptiveEngine
@@ -74,20 +97,47 @@ class Session:
     @property
     def post_execute_hooks(self) -> List[Callable[[QueryGraph, QueryResult],
                                                   None]]:
+        """Observers called as ``hook(query, result)`` after every
+        executed query, on any backend (append to tap the stream)."""
         return self.engine.post_execute_hooks
 
     @property
     def num_sites(self) -> int:
+        """Logical cluster width the plan was built for."""
         return self.engine.num_sites
 
     def execute(self, query: QueryGraph) -> QueryResult:
+        """Answer one query exactly.
+
+        Args:
+            query: pattern with negative ints as variables, non-negative
+                ints as vertex constants (``QueryGraph.make``).
+
+        Returns:
+            ``QueryResult`` -- ``bindings`` (variable -> int32 column),
+            ``num_rows``, and per-query ``stats``.
+        """
         return self.engine.execute(query)
 
     def execute_many(self, queries: Sequence[QueryGraph],
                      batch_size: int = 64) -> List[QueryResult]:
+        """Answer a query stream in batches (results in input order).
+
+        Args:
+            queries: the stream.
+            batch_size: chunk size handed to the backend; backends
+                exploit intra-batch structure (the SPMD backend
+                amortizes compilation via its shape-keyed cache).
+
+        Returns:
+            One ``QueryResult`` per query, in input order.
+        """
         return self.engine.execute_many(queries, batch_size=batch_size)
 
     def stats(self) -> EngineStats:
+        """Cumulative counters (see ``EngineBase.stats`` for the
+        ``extra`` key catalogue), stamped with this session's backend
+        and strategy provenance."""
         s = self.engine.stats()
         s.backend = self.backend
         s.strategy = self.plan.strategy

@@ -11,8 +11,33 @@ across the mesh axis, deduplicated, and expanded against each device's
 *local* edge table -- the paper's "ship intermediate results" step, so a
 match whose edges straddle devices is assembled exactly (the same
 shard-local-match-then-exchange discipline as AdPart's semi-join
-evaluation and TriAD's inter-node joins).  The edge tables never move;
-only binding tables do (the smaller side, DESIGN.md §3).
+evaluation and TriAD's inter-node joins).
+
+Which side moves is decided per join step by a size-aware
+**communication planner** (the paper's §7.3 communication-cost
+objective, the ROADMAP's size-aware broadcast-join item):
+
+* **skip** -- when the step's property is *shard-complete* (every
+  device already holds every resident edge of that property, detected
+  from per-property residency metadata at ``SiteStore`` build time),
+  nothing is shipped: each device extends its local bindings against
+  its local -- complete -- edge table.
+* **ship bindings** vs. **ship edges** -- otherwise the global binding
+  count (one scalar ``psum``, already tracked for overflow accounting)
+  is compared in-trace against the property's total resident edge rows
+  (static metadata): the smaller side is gathered.  Shipping edges
+  keeps every binding where it is and expands it against the gathered
+  global edge table -- exactly equivalent, cheaper when bindings
+  outgrow the property.
+
+All decisions are trace-time static in *shape* (a ``lax.cond`` between
+equal-shape branches), so the shape-keyed jit cache and the capacity
+retry tiers keep working; the per-step decisions and shipped-row counts
+are returned to the host for the ``comm_bytes`` ledger and the
+``gather_steps`` / ``edge_shipped_steps`` / ``skipped_gathers``
+counters.  ``SpmdEngine(comm_plan=False)`` (or
+``Session(spmd_comm_plan=False)``) restores the naive
+gather-bindings-every-step behaviour.
 
 Shapes are static everywhere (capacity + valid-count), so the whole
 query plan jits and the production-mesh dry-run can lower/compile it.
@@ -56,12 +81,32 @@ class SiteStore:
 
     s/p/o: (num_sites, E_max) int32, padded with -1 (never matches).
     sorted by (p, s) within each site so searchsorted probes work.
+
+    ``build`` also derives the static per-property residency metadata
+    the communication planner reads (host-side numpy, trace-time
+    constants):
+
+    * ``prop_dev_rows[j, p]``      -- edge rows of property ``p`` stored
+      on device ``j`` (what shipping that device's ``p``-table costs);
+    * ``prop_dev_distinct[j, p]``  -- distinct edge ids behind those
+      rows;
+    * ``prop_union_rows[p]``       -- distinct edge ids of ``p``
+      resident anywhere.
+
+    A property is *shard-complete* when every device's distinct set
+    equals the union -- e.g. a vertical fragment replicated by
+    overlapping FAPs, WARP's replicated pattern matches, or several
+    logical sites folded onto one device.  For such a step no
+    inter-device shipping is needed at all.
     """
     s: jax.Array
     p: jax.Array
     o: jax.Array
     num_sites: int
     e_max: int
+    prop_dev_rows: Optional[np.ndarray] = None       # (m, P) int64
+    prop_dev_distinct: Optional[np.ndarray] = None   # (m, P) int64
+    prop_union_rows: Optional[np.ndarray] = None     # (P,) int64
 
     @staticmethod
     def build(graph: RDFGraph, site_edge_ids: Sequence[np.ndarray],
@@ -72,14 +117,45 @@ class SiteStore:
         S = np.full((m, e_max), -1, np.int32)
         Pm = np.full((m, e_max), -1, np.int32)
         O = np.full((m, e_max), -1, np.int32)
+        n_props = graph.num_properties
+        dev_rows = np.zeros((m, n_props), np.int64)
+        dev_distinct = np.zeros((m, n_props), np.int64)
         for j, eids in enumerate(site_edge_ids):
             eids = np.asarray(eids, np.int64)
             s, p, o = graph.s[eids], graph.p[eids], graph.o[eids]
             order = np.lexsort((o, s, p))
             n = len(eids)
             S[j, :n], Pm[j, :n], O[j, :n] = s[order], p[order], o[order]
+            dev_rows[j] = np.bincount(p, minlength=n_props)[:n_props]
+            dev_distinct[j] = np.bincount(
+                graph.p[np.unique(eids)], minlength=n_props)[:n_props]
+        resident = np.unique(np.concatenate(
+            [np.zeros(0, np.int64)]
+            + [np.asarray(e, np.int64) for e in site_edge_ids]))
+        union = np.bincount(graph.p[resident], minlength=n_props)[:n_props]
         return SiteStore(jnp.asarray(S), jnp.asarray(Pm), jnp.asarray(O),
-                         m, e_max)
+                         m, e_max, dev_rows, dev_distinct, union)
+
+    def prop_shard_complete(self, prop: int) -> bool:
+        """Every device holds every resident edge of ``prop`` (so a join
+        step on it needs no inter-device shipping).  Properties outside
+        the metadata range (or resident nowhere) are trivially
+        complete."""
+        if self.prop_dev_distinct is None:
+            return False
+        if not (0 <= prop < self.prop_union_rows.shape[0]):
+            return True
+        return bool(np.all(self.prop_dev_distinct[:, prop]
+                           == self.prop_union_rows[prop]))
+
+    def prop_rows(self, prop: int) -> Tuple[int, int]:
+        """(total stored rows across devices, max rows on any device)
+        for ``prop`` -- the static size of the edge-shipping side."""
+        if (self.prop_dev_rows is None
+                or not 0 <= prop < self.prop_dev_rows.shape[1]):
+            return 0, 0
+        col = self.prop_dev_rows[:, prop]
+        return int(col.sum()), int(col.max(initial=0))
 
     @staticmethod
     def from_fragmentation(graph: RDFGraph, frag: Fragmentation,
@@ -95,6 +171,71 @@ class SiteStore:
             per_site.append(np.unique(np.concatenate(ids))
                             if ids else np.zeros(0, np.int64))
         return SiteStore.build(graph, per_site)
+
+
+# ----------------------------------------------------------------------
+# Per-join-step communication planning
+# ----------------------------------------------------------------------
+
+# decision codes, as reported in the matcher's per-step decision vector
+COMM_GATHER = 0   # shipped the binding tables (all_gather + dedup)
+COMM_EDGE = 1     # shipped the step property's edge rows instead
+COMM_SKIP = 2     # shipped nothing (shard-complete property / 1 device)
+
+
+def bind_row_bytes(num_cols: int) -> int:
+    """Wire bytes of one binding-table row: ``num_cols`` int32 columns
+    plus the validity byte.  The ONE formula shared by the in-trace
+    ship-smaller-side predicate and the host-side ``comm_bytes``
+    ledger -- they must never diverge."""
+    return num_cols * 4 + 1
+
+
+EDGE_ROW_BYTES = 8   # one shipped edge row: two int32 columns (key, pay)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepComm:
+    """Static communication spec for one join step (trace-time
+    constant; derived from ``SiteStore`` residency metadata).
+
+    mode:
+      ``"gather"``  -- always ship bindings (planner off);
+      ``"skip"``    -- property is shard-complete, ship nothing;
+      ``"dynamic"`` -- compare the psum'd global binding count against
+      ``edge_rows`` in-trace and ship the smaller side.
+    """
+    mode: str
+    prop: int
+    gather_cap: int     # per-device edge-gather buffer rows ("dynamic")
+    edge_rows: int      # total resident rows of ``prop`` across devices
+
+    @property
+    def edge_bytes(self) -> int:
+        """Wire bytes of shipping this property's resident edge rows
+        (per receiving peer)."""
+        return self.edge_rows * EDGE_ROW_BYTES
+
+
+def plan_step_comm(store: SiteStore, pattern: QueryGraph,
+                   enabled: bool = True) -> Tuple[StepComm, ...]:
+    """One ``StepComm`` per join step (steps >= 1 of the connected edge
+    order) for matching ``pattern`` over ``store``.  With
+    ``enabled=False`` every step ships bindings -- the naive broadcast
+    join."""
+    order = _connected_edge_order(pattern)
+    specs: List[StepComm] = []
+    for ei in order[1:]:
+        prop = pattern.edges[ei].prop
+        total, per_dev = store.prop_rows(prop)
+        if not enabled:
+            specs.append(StepComm("gather", prop, 0, total))
+        elif store.prop_shard_complete(prop):
+            specs.append(StepComm("skip", prop, 0, total))
+        else:
+            cap = int(np.ceil(max(per_dev, 1) / 8) * 8)
+            specs.append(StepComm("dynamic", prop, cap, total))
+    return tuple(specs)
 
 
 # ----------------------------------------------------------------------
@@ -209,10 +350,8 @@ def _compress_rows(bind: jax.Array, keep: jax.Array, capacity: int
                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Pack the rows selected by ``keep`` into a fresh capacity-row
     table.  Returns (bind, valid, overflow-row-count)."""
-    idx = jnp.nonzero(keep, size=capacity, fill_value=-1)[0]
-    valid = idx >= 0
-    idxc = jnp.clip(idx, 0, bind.shape[0] - 1)
-    out = jnp.where(valid[:, None], bind[idxc], -1)
+    from ..kernels.ops import compact_rows
+    (out,), valid = compact_rows(keep, (bind,), capacity, fill=-1)
     over = jnp.maximum(keep.sum() - capacity, 0).astype(jnp.int32)
     return out, valid, over
 
@@ -256,28 +395,46 @@ def pattern_var_order(pattern: QueryGraph) -> List[int]:
 
 def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
                  pattern: QueryGraph, capacity: int,
-                 axis: Optional[str] = None
-                 ) -> Tuple[jax.Array, jax.Array, List[int], jax.Array]:
+                 axis: Optional[str] = None,
+                 comm: Optional[Sequence[StepComm]] = None
+                 ) -> Tuple[jax.Array, jax.Array, List[int], jax.Array,
+                            jax.Array, jax.Array]:
     """Match ``pattern`` over one shard's edge table, padded to
     ``capacity`` rows.  Returns (bindings (capacity, V), valid,
-    var_order, overflow-row-count).
+    var_order, overflow-row-count, per-step decisions, per-step
+    shipped-row counts).
 
     With ``axis`` set (inside shard_map) every join step is a broadcast
-    join: the current binding tables are all_gather-ed across the mesh
-    axis, deduplicated, and expanded against THIS shard's edges -- so a
-    partial match discovered on any device can pick up its next edge
-    wherever that edge lives.  The union over devices of the step's
-    outputs is then exactly the set of partial matches of the first
-    step+1 pattern edges against the whole (distributed) graph.  With
-    ``axis=None`` the loop is purely shard-local (single-device case;
-    identical math, gathers skipped).
+    join whose shipping is chosen by ``comm`` (one ``StepComm`` per join
+    step; ``None`` means ship bindings every step):
 
-    jit-friendly: static pattern, static capacity; overflow (result rows
-    beyond capacity at any step) is counted, not silently dropped.
+    * ship **bindings**: all_gather + exact dedup of the binding tables,
+      then expand against THIS shard's edges -- a partial match
+      discovered on any device picks up its next edge wherever that
+      edge lives;
+    * ship **edges**: each device's rows of the step's property are
+      compacted into a static buffer and all_gather-ed instead, and the
+      *local* bindings expand against the global edge table -- exactly
+      equivalent, chosen in-trace (``lax.cond``) when the psum'd global
+      binding count outweighs the property's resident rows;
+    * **skip**: the property is shard-complete, so the local edge table
+      already is the global one -- no collective at all.
+
+    In every mode the union over devices of the step's outputs is
+    exactly the set of partial matches of the covered pattern prefix
+    against the whole (distributed) graph.  With ``axis=None`` the loop
+    is purely shard-local (single-device case; identical math, gathers
+    skipped, decisions all ``COMM_SKIP``).
+
+    jit-friendly: static pattern, static capacity, static per-step
+    specs; overflow (result rows beyond capacity at any step) is
+    counted, not silently dropped.
     """
+    from ..kernels.ops import compact_rows
     order = _connected_edge_order(pattern)
     edges = pattern.edges
     var_cols: List[int] = []
+    imax = jnp.iinfo(jnp.int32).max
 
     def col_idx(v: int) -> int:
         return var_cols.index(v)
@@ -285,10 +442,11 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
     bind = jnp.full((capacity, 0), -1, jnp.int32)
     valid = jnp.zeros((capacity,), bool)
     ovf = jnp.int32(0)
+    decs: List[jax.Array] = []
+    rows: List[jax.Array] = []
 
     for step, ei in enumerate(order):
         e = edges[ei]
-        keys, payload = _edge_table_for_prop(s, p, o, e.prop)
         s_known = e.src >= 0 or e.src in var_cols
         d_known = e.dst >= 0 or e.dst in var_cols
 
@@ -301,79 +459,162 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
                 sel &= o == e.dst
             if e.src < 0 and e.src == e.dst:
                 sel &= s == o
-            idx = jnp.nonzero(sel, size=capacity, fill_value=-1)[0]
-            valid = idx >= 0
+            (s_col, o_col), valid = compact_rows(sel, (s, o), capacity,
+                                                 fill=-1)
             ovf = jnp.maximum(
                 ovf, sel.sum().astype(jnp.int32) - capacity)
-            idxc = jnp.clip(idx, 0, s.shape[0] - 1)
             cols = []
             if e.src < 0:
                 var_cols.append(e.src)
-                cols.append(jnp.where(valid, s[idxc], -1))
+                cols.append(s_col)
             if e.dst < 0 and e.dst != e.src:
                 var_cols.append(e.dst)
-                cols.append(jnp.where(valid, o[idxc], -1))
+                cols.append(o_col)
             bind = (jnp.stack(cols, axis=1) if cols
                     else jnp.zeros((capacity, 0), jnp.int32)).astype(jnp.int32)
             continue
 
-        if axis is not None:
-            # broadcast join: ship every device's binding table (the
-            # small side -- edge tables stay resident), drop duplicates
-            # from replicated fragments, expand against local edges.
-            bind = jax.lax.all_gather(bind, axis, tiled=True)
-            valid = jax.lax.all_gather(valid, axis, tiled=True)
-            bind, valid = _dedup_padded(bind, valid)
-        nrows = bind.shape[0]   # capacity, or num_devices * capacity
+        sc = comm[step - 1] if comm is not None else None
+        mode = ("skip" if axis is None
+                else sc.mode if sc is not None else "gather")
+        n_in = len(var_cols)          # binding columns entering the step
+
+        # -- shared builders for this step (all shapes static) ----------
+        def local_pair_tables():
+            sel_ = p == e.prop
+            return jnp.where(sel_, s, imax), jnp.where(sel_, o, imax)
+
+        def gathered_prop_tables():
+            # the edge-shipping side: compact this device's rows of the
+            # property, gather every device's buffer (rows this device
+            # lacks arrive from wherever they are resident)
+            (ls, lo_), _ = compact_rows(p == e.prop, (s, o), sc.gather_cap)
+            return (jax.lax.all_gather(ls, axis, tiled=True),
+                    jax.lax.all_gather(lo_, axis, tiled=True))
+
+        def gathered_bindings(bt, vt):
+            gb = jax.lax.all_gather(bt, axis, tiled=True)
+            gv = jax.lax.all_gather(vt, axis, tiled=True)
+            shipped = gv.sum().astype(jnp.int32)   # rows on the wire
+            gb, gv = _dedup_padded(gb, gv)
+            return gb, gv, shipped
+
+        def ship_smaller_side(via_gather, via_edges):
+            # dynamic decision: psum the live global binding count and
+            # run the cheaper branch.  Cost comparison in float32:
+            # n_glob * row_bytes can exceed int32 on big meshes, and
+            # edge_bytes can exceed int32 as a trace-time constant;
+            # mantissa rounding is harmless for a heuristic.  The byte
+            # formulas are the ledger's (bind_row_bytes / edge_bytes),
+            # so decision and accounting cannot diverge.
+            n_glob = jax.lax.psum(valid.sum().astype(jnp.int32), axis)
+            pred = (n_glob.astype(jnp.float32) * float(bind_row_bytes(n_in))
+                    <= jnp.float32(sc.edge_bytes))
+            out = jax.lax.cond(pred, via_gather, via_edges, bind, valid)
+            dec = jnp.where(pred, COMM_GATHER, COMM_EDGE).astype(jnp.int32)
+            return out, dec, n_glob
 
         if s_known and d_known:
-            sv = (jnp.full((nrows,), e.src, jnp.int32) if e.src >= 0
-                  else bind[:, col_idx(e.src)])
-            dv = (jnp.full((nrows,), e.dst, jnp.int32) if e.dst >= 0
-                  else bind[:, col_idx(e.dst)])
-            # membership of (sv, dv) among this property's local edges
-            # (cycle close).  Sentinel rows (INT32_MAX, INT32_MAX) never
-            # equal a real id pair; invalid probe rows are masked below.
-            sel = p == e.prop
-            t_s = jnp.where(sel, s, jnp.iinfo(jnp.int32).max)
-            t_o = jnp.where(sel, o, jnp.iinfo(jnp.int32).max)
-            keep = valid & _probe_pair_member(sv, dv, t_s, t_o)
-            if axis is None:
-                valid = keep
+            # cycle close: membership of the bound (src, dst) pair among
+            # the property's edges.  Sentinel table rows (INT32_MAX,
+            # INT32_MAX) never equal a real id pair; invalid probe rows
+            # are masked via ``vt``.
+            def pair_keep(bt, vt, t_s, t_o):
+                nr = bt.shape[0]
+                sv = (jnp.full((nr,), e.src, jnp.int32) if e.src >= 0
+                      else bt[:, col_idx(e.src)])
+                dv = (jnp.full((nr,), e.dst, jnp.int32) if e.dst >= 0
+                      else bt[:, col_idx(e.dst)])
+                return vt & _probe_pair_member(sv, dv, t_s, t_o)
+
+            def pair_via_gather(bt, vt):
+                gb, gv, shipped = gathered_bindings(bt, vt)
+                t_s, t_o = local_pair_tables()
+                nb, nv, over = _compress_rows(
+                    gb, pair_keep(gb, gv, t_s, t_o), capacity)
+                return nb, nv, over, shipped
+
+            def pair_via_edges(bt, vt):
+                t_s, t_o = gathered_prop_tables()
+                keep = pair_keep(bt, vt, t_s, t_o)
+                return (jnp.where(keep[:, None], bt, -1), keep,
+                        jnp.int32(0), jnp.int32(sc.edge_rows))
+
+            if mode == "skip":
+                t_s, t_o = local_pair_tables()
+                valid = pair_keep(bind, valid, t_s, t_o)
                 bind = jnp.where(valid[:, None], bind, -1)
-            else:   # gathered rows: pack the survivors back to capacity
-                bind, valid, over = _compress_rows(bind, keep, capacity)
-                ovf = jnp.maximum(ovf, over)
-        elif s_known:
-            sv = (jnp.full((nrows,), e.src, jnp.int32) if e.src >= 0
-                  else bind[:, col_idx(e.src)])
-            bind, new_col, valid, over = _expand_fixed(
-                bind, valid, sv, keys, payload, capacity)
+                over = jnp.int32(0)
+                dec_v, row_v = jnp.int32(COMM_SKIP), jnp.int32(0)
+            elif mode == "gather":
+                bind, valid, over, shipped = pair_via_gather(bind, valid)
+                dec_v, row_v = jnp.int32(COMM_GATHER), shipped
+            else:  # dynamic: ship the smaller side
+                (bind, valid, over, _), dec_v, row_v = ship_smaller_side(
+                    pair_via_gather, pair_via_edges)
             ovf = jnp.maximum(ovf, over)
-            if e.dst < 0:
-                var_cols.append(e.dst)
+        else:
+            # expansion: probe the known endpoint against the property's
+            # (key -> payload) table; keys are subjects when the source
+            # is bound, objects when the destination is.
+            known = e.src if s_known else e.dst
+
+            def probe_vals(bt):
+                nr = bt.shape[0]
+                return (jnp.full((nr,), known, jnp.int32) if known >= 0
+                        else bt[:, col_idx(known)])
+
+            def local_table():
+                if s_known:
+                    return _edge_table_for_prop(s, p, o, e.prop)
+                sel_ = p == e.prop
+                okeys = jnp.where(sel_, o, imax)
+                oorder = jnp.argsort(okeys)
+                return okeys[oorder], s[oorder]
+
+            def exp_via_gather(bt, vt):
+                gb, gv, shipped = gathered_bindings(bt, vt)
+                keys, payload = local_table()
+                nb, nc, nv, over = _expand_fixed(
+                    gb, gv, probe_vals(gb), keys, payload, capacity)
+                return nb, nc, nv, over, shipped
+
+            def exp_via_edges(bt, vt):
+                g_s, g_o = gathered_prop_tables()
+                gk, gp = (g_s, g_o) if s_known else (g_o, g_s)
+                gorder = jnp.argsort(gk)
+                nb, nc, nv, over = _expand_fixed(
+                    bt, vt, probe_vals(bt), gk[gorder], gp[gorder],
+                    capacity)
+                return nb, nc, nv, over, jnp.int32(sc.edge_rows)
+
+            if mode == "skip":
+                keys, payload = local_table()
+                bind, new_col, valid, over = _expand_fixed(
+                    bind, valid, probe_vals(bind), keys, payload, capacity)
+                dec_v, row_v = jnp.int32(COMM_SKIP), jnp.int32(0)
+            elif mode == "gather":
+                bind, new_col, valid, over, shipped = exp_via_gather(
+                    bind, valid)
+                dec_v, row_v = jnp.int32(COMM_GATHER), shipped
+            else:  # dynamic: ship the smaller side
+                (bind, new_col, valid, over, _), dec_v, row_v = \
+                    ship_smaller_side(exp_via_gather, exp_via_edges)
+            ovf = jnp.maximum(ovf, over)
+            new_var = e.dst if s_known else e.src
+            if new_var < 0:
+                var_cols.append(new_var)
                 bind = jnp.concatenate([bind, new_col[:, None]], axis=1)
             else:
-                valid = valid & (new_col == e.dst)
-                bind = jnp.where(valid[:, None], bind, -1)
-        else:  # d_known only: probe object-sorted table
-            sel = p == e.prop
-            okeys = jnp.where(sel, o, jnp.iinfo(jnp.int32).max)
-            oorder = jnp.argsort(okeys)
-            okeys_s, opayload = okeys[oorder], s[oorder]
-            dv = (jnp.full((nrows,), e.dst, jnp.int32) if e.dst >= 0
-                  else bind[:, col_idx(e.dst)])
-            bind, new_col, valid, over = _expand_fixed(
-                bind, valid, dv, okeys_s, opayload, capacity)
-            ovf = jnp.maximum(ovf, over)
-            if e.src < 0:
-                var_cols.append(e.src)
-                bind = jnp.concatenate([bind, new_col[:, None]], axis=1)
-            else:
-                valid = valid & (new_col == e.src)
+                valid = valid & (new_col == new_var)
                 bind = jnp.where(valid[:, None], bind, -1)
 
-    return bind, valid, var_cols, jnp.maximum(ovf, 0)
+        decs.append(dec_v)
+        rows.append(row_v)
+
+    dec_arr = (jnp.stack(decs) if decs else jnp.zeros((0,), jnp.int32))
+    row_arr = (jnp.stack(rows) if rows else jnp.zeros((0,), jnp.int32))
+    return bind, valid, var_cols, jnp.maximum(ovf, 0), dec_arr, row_arr
 
 
 def local_match(s: jax.Array, p: jax.Array, o: jax.Array,
@@ -381,7 +622,8 @@ def local_match(s: jax.Array, p: jax.Array, o: jax.Array,
                 ) -> Tuple[jax.Array, jax.Array, List[int]]:
     """Shard-local matching (no collectives): compatibility wrapper over
     ``_match_shard`` returning (bindings, valid, var_order)."""
-    bind, valid, cols, _ovf = _match_shard(s, p, o, pattern, capacity)
+    bind, valid, cols, _ovf, _dec, _rows = _match_shard(s, p, o, pattern,
+                                                        capacity)
     return bind, valid, cols
 
 
@@ -407,17 +649,19 @@ def compat_shard_map(fn, mesh, in_specs, out_specs):
 
 
 def make_spmd_matcher(mesh: Mesh, axis: str, pattern: QueryGraph,
-                      capacity: int):
+                      capacity: int,
+                      comm: Optional[Sequence[StepComm]] = None):
     """Build a jitted SPMD function: site-sharded (s,p,o) -> gathered
-    binding tables (num_sites * capacity, V), validity mask, and the
-    per-device overflow row count (num_sites,).
+    binding tables (num_sites * capacity, V), validity mask, the
+    per-device overflow row count (num_sites,), and the planner's
+    per-join-step decision / shipped-row vectors (replicated).
 
-    Every join step inside ``_match_shard`` broadcast-joins the binding
-    tables (all_gather of the smaller side -- the paper's 'ship
-    intermediate results' step); those bytes are what the §Roofline
-    collective term counts.  A non-zero overflow entry means that
-    device's table filled and the caller must retry at a higher
-    capacity for an exact answer.
+    Every join step inside ``_match_shard`` broadcast-joins with the
+    shipping mode chosen by ``comm`` (see ``plan_step_comm``; ``None``
+    ships bindings every step -- the paper's 'ship intermediate
+    results'); those bytes are what the §Roofline collective term
+    counts.  A non-zero overflow entry means that device's table filled
+    and the caller must retry at a higher capacity for an exact answer.
     """
     # on a 1-device mesh the per-step gathers are identity and the
     # gathered dedup can never find anything (folded site groups are
@@ -426,16 +670,16 @@ def make_spmd_matcher(mesh: Mesh, axis: str, pattern: QueryGraph,
     step_axis = axis if int(np.prod(mesh.devices.shape)) > 1 else None
 
     def per_site(s, p, o):
-        bind, valid, cols, ovf = _match_shard(s[0], p[0], o[0], pattern,
-                                              capacity, axis=step_axis)
+        bind, valid, cols, ovf, dec, rows = _match_shard(
+            s[0], p[0], o[0], pattern, capacity, axis=step_axis, comm=comm)
         g_bind = jax.lax.all_gather(bind, axis, tiled=True)
         g_valid = jax.lax.all_gather(valid, axis, tiled=True)
         g_ovf = jax.lax.all_gather(ovf[None], axis, tiled=True)
-        return g_bind, g_valid, g_ovf
+        return g_bind, g_valid, g_ovf, dec, rows
 
     fn = compat_shard_map(per_site, mesh,
                           (P(axis, None), P(axis, None), P(axis, None)),
-                          (P(), P(), P()))
+                          (P(), P(), P(), P(), P()))
     return jax.jit(fn)
 
 
@@ -444,7 +688,8 @@ def spmd_match(store: SiteStore, mesh: Mesh, axis: str,
                ) -> Tuple[np.ndarray, List[int]]:
     """Run the SPMD matcher and return deduped host-side bindings."""
     fn = make_spmd_matcher(mesh, axis, pattern, capacity)
-    bind, valid, _ovf = jax.device_get(fn(store.s, store.p, store.o))
+    bind, valid, _ovf, _dec, _rows = jax.device_get(
+        fn(store.s, store.p, store.o))
     cols = pattern_var_order(pattern)
     rows = bind[np.asarray(valid)]
     if rows.size:
@@ -482,12 +727,28 @@ class SpmdEngine(EngineBase):
     truncated answer.  ``stats().extra`` reports ``capacity_retries``
     (re-executions at a higher tier) and ``overflow_events`` (attempts
     that overflowed).
+
+    With ``comm_plan=True`` (default) every join step's shipping is
+    planned size-aware (see ``plan_step_comm`` / ``_match_shard``):
+    shard-complete properties skip the collective entirely, and
+    otherwise the smaller of global-bindings vs. property-edge-rows is
+    shipped.  ``stats().comm_bytes`` accounts the data-plane bytes
+    actually put on the wire (valid binding rows / resident edge rows
+    to each of the ``m - 1`` peers; control scalars such as the
+    planner's psum'd binding count are not ledgered, matching the host
+    engine's intermediate-result accounting), and ``stats().extra``
+    counts per-step outcomes
+    (``gather_steps`` / ``edge_shipped_steps`` / ``skipped_gathers``)
+    and the ledger delta vs. always-gathering (``comm_bytes_saved``).
+    ``comm_plan=False`` restores the naive gather-every-step plan
+    (same exact answers, byte ledger accounted the same way).
     """
 
     def __init__(self, graph: RDFGraph, site_edge_ids: Sequence[np.ndarray],
                  mesh: Optional[Mesh] = None, axis: str = "sites",
                  capacity: int = 4096, cost: Optional[CostModel] = None,
-                 max_capacity: Optional[int] = None):
+                 max_capacity: Optional[int] = None,
+                 comm_plan: bool = True):
         self._init_engine_base()
         self.graph = graph
         self.logical_sites = len(site_edge_ids)
@@ -507,11 +768,14 @@ class SpmdEngine(EngineBase):
                                 else max(self.capacity, 1 << 20),
                                 self.capacity)
         self.cost = cost or CostModel()
+        self.comm_plan = bool(comm_plan)
         # keyed by exact edge structure (NOT QueryGraph, whose __eq__ is
         # canonical-isomorphism: isomorphic patterns with different edge
         # orders produce different binding-column orders and must not
         # share a compiled matcher) x capacity tier
         self._matchers: Dict[Tuple[Tuple, int], object] = {}
+        # per-pattern static communication specs (planner output)
+        self._comm_specs: Dict[Tuple, Tuple[StepComm, ...]] = {}
         # last capacity tier that answered this edge structure exactly:
         # repeat queries start the retry ladder there instead of
         # re-climbing (and re-executing) every lower tier
@@ -519,38 +783,60 @@ class SpmdEngine(EngineBase):
         self._compiles = 0
         self._bump("capacity_retries", 0)
         self._bump("overflow_events", 0)
+        self._bump("gather_steps", 0)
+        self._bump("edge_shipped_steps", 0)
+        self._bump("skipped_gathers", 0)
+        self._bump("comm_bytes_saved", 0)
 
     @property
     def num_sites(self) -> int:
         return self.logical_sites
 
     # ------------------------------------------------------------------
+    def _comm_spec(self, pattern: QueryGraph) -> Tuple[StepComm, ...]:
+        """Static per-join-step communication spec for this pattern over
+        the engine's store (cached; planner on/off is fixed per
+        engine)."""
+        spec = self._comm_specs.get(pattern.edges)
+        if spec is None:
+            spec = plan_step_comm(self.store, pattern,
+                                  enabled=self.comm_plan)
+            self._comm_specs[pattern.edges] = spec
+        return spec
+
     def _matcher(self, pattern: QueryGraph, capacity: int):
         key = (pattern.edges, capacity)
         fn = self._matchers.get(key)
         if fn is None:
-            fn = make_spmd_matcher(self.mesh, self.axis, pattern, capacity)
+            fn = make_spmd_matcher(self.mesh, self.axis, pattern, capacity,
+                                   comm=self._comm_spec(pattern))
             self._matchers[key] = fn
             self._compiles += 1
         return fn
 
-    def _run_exact(self, norm: QueryGraph) -> Tuple[np.ndarray, np.ndarray,
-                                                    List[int]]:
+    def _run_exact(self, norm: QueryGraph
+                   ) -> Tuple[np.ndarray, np.ndarray, List[int],
+                              List[Tuple[np.ndarray, np.ndarray, int]]]:
         """Execute the matcher for a normalized pattern, geometrically
         doubling the binding-table capacity until no device overflows.
         Returns (bindings, valid, capacities attempted -- last one
-        succeeded).  Raises RuntimeError if ``max_capacity`` is still
-        too small -- a truncated answer is never returned."""
+        succeeded, per-attempt (step decisions, step shipped rows,
+        final-gather valid rows) for the comm ledger).  Raises
+        RuntimeError if ``max_capacity`` is still too small -- a
+        truncated answer is never returned."""
         cap = self._cap_hints.get(norm.edges, self.capacity)
         caps: List[int] = []
+        attempts: List[Tuple[np.ndarray, np.ndarray, int]] = []
         while True:
             caps.append(cap)
             fn = self._matcher(norm, cap)
-            bind, valid, ovf = jax.device_get(
+            bind, valid, ovf, dec, rows = jax.device_get(
                 fn(self.store.s, self.store.p, self.store.o))
+            attempts.append((np.asarray(dec), np.asarray(rows),
+                             int(np.asarray(valid).sum())))
             if int(np.max(np.asarray(ovf), initial=0)) <= 0:
                 self._cap_hints[norm.edges] = cap
-                return np.asarray(bind), np.asarray(valid), caps
+                return np.asarray(bind), np.asarray(valid), caps, attempts
             self._bump("overflow_events")
             if cap >= self.max_capacity:
                 raise RuntimeError(
@@ -564,13 +850,18 @@ class SpmdEngine(EngineBase):
             self._bump("capacity_retries")
 
     def execute(self, query: QueryGraph) -> QueryResult:
+        """Match ``query`` whole as one SPMD program and return the
+        exact ``QueryResult`` (see class docstring for the retry /
+        planning behaviour).  Raises ``NotImplementedError`` for
+        wildcard properties and ``RuntimeError`` when ``max_capacity``
+        cannot hold the answer."""
         if any(e.prop == PROP_VAR for e in query.edges):
             raise NotImplementedError(
                 "SPMD matcher requires constant properties (wildcard "
                 "property labels would match the -1 padding)")
         t0 = time.perf_counter()
         norm = query.normalize()
-        bind, valid, caps = self._run_exact(norm)
+        bind, valid, caps, attempts = self._run_exact(norm)
         rows = bind[valid]
         if rows.size:
             rows = np.unique(rows, axis=0)
@@ -586,18 +877,38 @@ class SpmdEngine(EngineBase):
         bindings = {orig: rows[:, col_of[nv]].astype(np.int32)
                     for orig, nv in nmap.items() if orig < 0}
         n = int(rows.shape[0])
-        # all_gather accounting: each broadcast-join step ships every
-        # device's binding table (cols at that step, plus the valid
-        # byte) to the other m-1 devices; the final gather ships the
-        # full-width table once more.  Overflowed attempts really ran
-        # their gathers on device, so every attempted tier is counted.
+        # communication ledger, from the per-step decisions the matcher
+        # reported: logical data-plane bytes on the wire per step (each
+        # device ships to the other m-1 peers), either the valid
+        # binding rows (cols * int32 + the valid byte), the property's
+        # resident edge rows (two int32 columns), or nothing when the
+        # step was skipped.  Control scalars (the planner's psum'd
+        # binding count, the per-device overflow counts) are not
+        # ledgered, matching the host engine's intermediate-result
+        # accounting.  The final gather ships every device's full-width
+        # valid rows once more.  Overflowed attempts really ran their
+        # gathers on device, so every attempted tier is counted.
         m = self.store.num_sites
         V = len(col_of)
+        spec = self._comm_spec(norm)
         comm = 0
-        for cap in caps:
-            per_dev = int(m * max(m - 1, 0) * cap)
-            comm += sum(per_dev * (c * 4 + 1) for c in step_in_cols)
-            comm += per_dev * (V * 4 + 1)
+        if m > 1:               # 1 device: no peers, nothing ever ships
+            for dec, srows, n_final in attempts:
+                for ji, sc in enumerate(spec):
+                    d, r = int(dec[ji]), int(srows[ji])
+                    row_bytes = bind_row_bytes(step_in_cols[ji])
+                    if d == COMM_GATHER:
+                        comm += (m - 1) * r * row_bytes
+                        self._bump("gather_steps")
+                    elif d == COMM_EDGE:
+                        comm += (m - 1) * sc.edge_bytes
+                        self._bump("edge_shipped_steps")
+                        self._bump("comm_bytes_saved",
+                                   (m - 1) * (r * row_bytes
+                                              - sc.edge_bytes))
+                    else:
+                        self._bump("skipped_gathers")
+                comm += (m - 1) * n_final * bind_row_bytes(V)
         elapsed = time.perf_counter() - t0
         stats = ExecStats(elapsed, int(comm),
                           set(range(self.logical_sites)),
@@ -606,4 +917,5 @@ class SpmdEngine(EngineBase):
 
     def _stats_extra(self) -> Dict[str, float]:
         return {"compiled_shapes": float(self._compiles),
-                "devices": float(self.store.num_sites)}
+                "devices": float(self.store.num_sites),
+                "comm_planner": float(self.comm_plan)}

@@ -113,6 +113,31 @@ TEMPLATE_CLASS = ["L", "L", "L", "S", "S", "S", "S", "F", "F", "C", "C",
                   "S", "S"]  # structural class per template above
 
 
+def make_shape_queries(next_prop, k: int = 3) -> Dict[str, QueryGraph]:
+    """One star / chain / cycle query of ``k`` edges each -- the
+    canonical shapes of the SPMD differential harness and the
+    communication benches (one definition, so bench and tests cannot
+    diverge).
+
+    Args:
+        next_prop: zero-arg callable returning the property id for the
+            next edge (uniform over properties, frequency-weighted over
+            edges, whatever the caller wants).
+        k: edges per query (>= 2 for a meaningful cycle).
+
+    Returns:
+        ``{"star": ..., "chain": ..., "cycle": ...}``.
+    """
+    star = QueryGraph.make(
+        [(-1, -(i + 2), next_prop()) for i in range(k)])
+    chain = QueryGraph.make(
+        [(-(i + 1), -(i + 2), next_prop()) for i in range(k)])
+    cycle = QueryGraph.make(
+        [(-(i + 1), -(i + 2), next_prop()) for i in range(k - 1)]
+        + [(-k, -1, next_prop())])
+    return {"star": star, "chain": chain, "cycle": cycle}
+
+
 def generate_workload(graph: RDFGraph, num_queries: int, seed: int = 0,
                       templates: Optional[List[QueryGraph]] = None,
                       zipf_a: float = 1.3, cold_fraction: float = 0.03,

@@ -8,7 +8,9 @@ Kernels (each: <name>.py kernel body, ops.py jit wrapper, ref.py oracle):
 
 Validated on CPU via interpret=True; compiled natively on TPU.
 """
-from .ops import attention, join_count, pair_semijoin, semijoin
+from .ops import (attention, compact_rows, join_count, pair_semijoin,
+                  semijoin)
 from . import ref
 
-__all__ = ["attention", "join_count", "pair_semijoin", "semijoin", "ref"]
+__all__ = ["attention", "compact_rows", "join_count", "pair_semijoin",
+           "semijoin", "ref"]

@@ -41,6 +41,32 @@ def _pad_tail(x: jax.Array, mult: int) -> jax.Array:
     return x
 
 
+def compact_rows(sel: jax.Array, cols: Tuple[jax.Array, ...], size: int,
+                 fill: int = INT32_MAX
+                 ) -> Tuple[Tuple[jax.Array, ...], jax.Array]:
+    """Pack the rows where ``sel`` holds into fixed-``size`` buffers,
+    padded with the ``fill`` sentinel -- the shape-static gather that
+    lets a data-dependent selection travel through jit / collectives
+    (e.g. the SPMD edge-shipping step gathers each device's rows of one
+    property this way before an ``all_gather``; the match seed step and
+    the binding-table compaction pack rows with it too).
+
+    Each entry of ``cols`` is indexed on its leading axis, so 1-D key
+    columns and 2-D row tables both work.  Returns ``(packed columns,
+    valid mask)``.  Selected rows beyond ``size`` are dropped (not an
+    error): callers either guarantee ``sel.sum() <= size`` statically
+    (the SPMD planner sizes the buffer from the ``SiteStore`` residency
+    metadata) or count the surplus as overflow themselves (the
+    capacity-retry ladder).
+    """
+    idx = jnp.nonzero(sel, size=size, fill_value=-1)[0]
+    ok = idx >= 0
+    idxc = jnp.clip(idx, 0, sel.shape[0] - 1)
+    return tuple(jnp.where(ok.reshape((size,) + (1,) * (c.ndim - 1)),
+                           c[idxc].astype(jnp.int32), fill)
+                 for c in cols), ok
+
+
 def _block_plan_1d(qs_p: jax.Array, ts_p: jax.Array, bm: int, bn: int,
                    jit_safe: bool):
     """Block plan on one sorted+padded key column: first overlapping

@@ -41,6 +41,17 @@ from .refragment import RefragmentResult, refragment
 
 @dataclasses.dataclass
 class AdaptiveConfig:
+    """Knobs of the adaptive control loop.
+
+    ``epoch_len`` queries close an epoch; the monitor decays per query
+    by ``decay`` and spills to a sketch past ``monitor_capacity``
+    shapes.  Drift fires past ``tv_threshold`` (total-variation on
+    property mass) or ``coverage_drop_threshold`` (FAP coverage loss),
+    but only once ``min_effective_weight`` queries of evidence exist
+    and ``cooldown_epochs`` have passed since the last re-partition.
+    Each migration ships at most ``migration_budget_bytes``
+    (``bytes_per_edge`` per edge) over ``link_bytes_per_sec`` links.
+    """
     epoch_len: int = 200                  # queries per epoch
     decay: float = 0.995                  # monitor half-life ~ 138 queries
     monitor_capacity: int = 512
@@ -55,6 +66,9 @@ class AdaptiveConfig:
 
 @dataclasses.dataclass
 class EpochReport:
+    """One closed epoch of the before/after ledger: what was executed,
+    what it shipped, whether drift fired, and what the migration moved
+    (``deferred_moves`` stayed put under the byte budget)."""
     epoch: int
     queries: int
     comm_bytes: int                       # query shipping this epoch
@@ -131,15 +145,28 @@ class AdaptiveEngine(EngineBase):
             lambda q, r: self.monitor.observe(q))
 
     @property
-    def dict(self) -> DataDictionary:          # legacy attribute surface
+    def dict(self) -> DataDictionary:
+        """Data dictionary of the *current* fragmentation (legacy
+        attribute surface; swaps on re-partition)."""
         return self.engine.dict
 
     @property
     def num_sites(self) -> int:
+        """Logical cluster width (constant across re-partitions)."""
         return self.pcfg.num_sites
 
     # ------------------------------------------------------------------
     def execute(self, query: QueryGraph) -> QueryResult:
+        """Answer one query on the current fragmentation, feed the
+        workload monitor, and close the epoch (drift check + possible
+        re-partition) once ``epoch_len`` queries have accumulated.
+
+        Args:
+            query: the pattern to answer.
+
+        Returns:
+            The exact ``QueryResult`` from the underlying host engine.
+        """
         r = self.engine.execute(query)
         self._epoch_queries += 1
         self._epoch_comm += r.stats.comm_bytes
@@ -156,7 +183,14 @@ class AdaptiveEngine(EngineBase):
 
     # ------------------------------------------------------------------
     def end_epoch(self) -> EpochReport:
-        """Close the epoch: drift check, optional repartition+migration."""
+        """Close the current epoch (callable early, e.g. from a
+        scheduler): compare the live workload distribution against the
+        design reference and, if drift fired and the cooldown passed,
+        re-mine/re-select/migrate within budget.
+
+        Returns:
+            The ``EpochReport`` appended to ``self.epochs``.
+        """
         drift: Optional[DriftReport] = None
         repartitioned = False
         moved = 0

@@ -98,20 +98,28 @@ def rqueries(rgraph):
 # Differential harness: spmd vs exact host backend, every strategy
 # ----------------------------------------------------------------------
 
+@pytest.mark.parametrize("comm_plan", [True, False],
+                         ids=["planned", "naive"])
 @pytest.mark.parametrize("kind", sorted(STRATEGIES.names()))
-def test_spmd_answer_sets_match_host_backend(rgraph, rqueries, kind):
+def test_spmd_answer_sets_match_host_backend(rgraph, rqueries, kind,
+                                             comm_plan):
+    """The differential harness, with the size-aware communication
+    planner both enabled (ship-smaller-side + shard-complete skip) and
+    disabled (gather binding tables before every join step): answer
+    sets must equal the exact host backend's either way, for every
+    registered strategy."""
     plan = build_plan(rgraph, Workload(list(rqueries)),
                       PartitionConfig(kind=kind, num_sites=4))
     host_backend = "local" if plan.frag is not None else "baseline"
     host = Session(plan, backend=host_backend)
-    spmd = Session(plan, backend="spmd")
+    spmd = Session(plan, backend="spmd", spmd_comm_plan=comm_plan)
     for q in rqueries:
         rh, rs = host.execute(q), spmd.execute(q)
         vh, sh = _answer_set(rh)
         vs, ss = _answer_set(rs)
         assert vh == vs, f"{kind}: variable sets diverged on {q.edges}"
         assert sh == ss, (f"{kind}: spmd answer set != {host_backend} "
-                          f"on {q.edges}")
+                          f"on {q.edges} (comm_plan={comm_plan})")
 
 
 def test_spmd_matches_whole_graph_matcher(rgraph, rqueries):
