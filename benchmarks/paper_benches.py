@@ -221,6 +221,37 @@ def _shape_workload(g, per_shape: int = 4, seed: int = 9):
     return shapes
 
 
+def _ledger_comparison(bench: str, g, sessions: Dict[str, Session]
+                       ) -> Tuple[Dict[str, Dict[str, int]],
+                                  Dict[str, int]]:
+    """Shared scaffold of the SPMD ledger benches: run the star/chain/
+    cycle workload through every session, emit per-shape mismatch/
+    comm/wall rows and per-session totals, and return (shape ->
+    session -> shipped bytes, session -> total bytes) for the closing
+    comparisons."""
+    totals = {name: 0 for name in sessions}
+    per_shape: Dict[str, Dict[str, int]] = {}
+    for shape, qs in _shape_workload(g).items():
+        want = [match_pattern(g, q).num_rows for q in qs]
+        by_session: Dict[str, int] = {}
+        for name, sess in sessions.items():
+            before = sess.stats().comm_bytes
+            t0 = time.perf_counter()
+            rows = [sess.execute(q).num_rows for q in qs]
+            dt = time.perf_counter() - t0
+            shipped = sess.stats().comm_bytes - before
+            totals[name] += shipped
+            by_session[name] = shipped
+            emit(bench, f"{name}_{shape}", "mismatches",
+                 sum(a != b for a, b in zip(rows, want)))
+            emit(bench, f"{name}_{shape}", "comm_bytes", float(shipped))
+            emit(bench, f"{name}_{shape}", "wall_sec", dt)
+        per_shape[shape] = by_session
+    for name in sessions:
+        emit(bench, name, "comm_bytes_total", float(totals[name]))
+    return per_shape, totals
+
+
 def bench_spmd_comm() -> None:
     g, wl = _setup(n_triples=8_000, n_queries=500, seed=5)
     plan = build_plan(g, wl, PartitionConfig(kind="vertical", num_sites=4))
@@ -229,23 +260,7 @@ def bench_spmd_comm() -> None:
         "spmd_naive": Session(plan, backend="spmd", spmd_comm_plan=False),
         "spmd_planned": Session(plan, backend="spmd"),
     }
-    totals = {name: 0 for name in sessions}
-    for shape, qs in _shape_workload(g).items():
-        want = [match_pattern(g, q).num_rows for q in qs]
-        for name, sess in sessions.items():
-            before = sess.stats().comm_bytes
-            t0 = time.perf_counter()
-            rows = [sess.execute(q).num_rows for q in qs]
-            dt = time.perf_counter() - t0
-            shipped = sess.stats().comm_bytes - before
-            totals[name] += shipped
-            emit("spmd_comm", f"{name}_{shape}", "mismatches",
-                 sum(a != b for a, b in zip(rows, want)))
-            emit("spmd_comm", f"{name}_{shape}", "comm_bytes",
-                 float(shipped))
-            emit("spmd_comm", f"{name}_{shape}", "wall_sec", dt)
-    for name, sess in sessions.items():
-        emit("spmd_comm", name, "comm_bytes_total", float(totals[name]))
+    _, totals = _ledger_comparison("spmd_comm", g, sessions)
     st = sessions["spmd_planned"].stats()
     for key in ("gather_steps", "edge_shipped_steps", "skipped_gathers",
                 "comm_bytes_saved", "capacity_retries", "overflow_events",
@@ -255,8 +270,57 @@ def bench_spmd_comm() -> None:
          float(totals["spmd_planned"] <= totals["spmd_naive"]))
 
 
+# ----------------------------------------------------------------------
+# Allocation-aware replication: the same plan built twice -- PR-4 style
+# (size-aware comm planning only) and with the budgeted replication pass
+# (`replication_budget_bytes`), serving the same star/chain/cycle
+# workload on the SPMD backend.  Replicated hot properties are
+# shard-complete, so their join steps skip the collective and
+# replicated-seed queries decimate their seeds across the mesh; the
+# acceptance property is that the replicated ledger never exceeds the
+# planned one on any shape and is strictly lower on at least one
+# (`replicated_leq_planned_all` / `replicated_lt_planned_any` rows).
+# Both sessions run at the same oversized capacity so neither pays
+# retry tiers and the ledgers compare like for like.
+# ----------------------------------------------------------------------
+
+def bench_spmd_replication() -> None:
+    g, wl = _setup(n_triples=8_000, n_queries=500, seed=5)
+    budget = 500_000
+    plans = {
+        "spmd_planned": build_plan(g, wl, PartitionConfig(
+            kind="vertical", num_sites=4)),
+        "spmd_replicated": build_plan(g, wl, PartitionConfig(
+            kind="vertical", num_sites=4,
+            replication_budget_bytes=budget)),
+    }
+    emit("spmd_replication", "spmd_replicated", "replicated_props",
+         float(len(plans["spmd_replicated"].replicated_props)))
+    emit("spmd_replication", "spmd_replicated", "replica_budget_bytes",
+         float(budget))
+    emit("spmd_replication", "spmd_replicated", "replica_spent_bytes",
+         float(plans["spmd_replicated"].replication.spent_bytes))
+    sessions = {name: Session(plan, backend="spmd", spmd_capacity=16384)
+                for name, plan in plans.items()}
+    per_shape, _ = _ledger_comparison("spmd_replication", g, sessions)
+    st = sessions["spmd_replicated"].stats()
+    for key in ("skipped_gathers", "replication_skipped_steps",
+                "decimated_seed_queries", "edge_cache_hits",
+                "gather_steps", "edge_shipped_steps",
+                "capacity_retries", "devices"):
+        emit("spmd_replication", "spmd_replicated", key, st.extra[key])
+    emit("spmd_replication", "replicated_vs_planned",
+         "replicated_leq_planned_all",
+         float(all(v["spmd_replicated"] <= v["spmd_planned"]
+                   for v in per_shape.values())))
+    emit("spmd_replication", "replicated_vs_planned",
+         "replicated_lt_planned_any",
+         float(any(v["spmd_replicated"] < v["spmd_planned"]
+                   for v in per_shape.values())))
+
+
 ALL = [bench_minsup, bench_throughput, bench_response, bench_scalability,
        bench_redundancy, bench_offline, bench_queries, bench_engine_parity,
-       bench_spmd_comm]
+       bench_spmd_comm, bench_spmd_replication]
 
 SMOKE = [bench_engine_parity]

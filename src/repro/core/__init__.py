@@ -29,8 +29,10 @@ from .mining import (FrequentPattern, mine_frequent_patterns,
 from .selection import SelectionResult, select_patterns
 from .fragmentation import (Fragment, Fragmentation, build_fragmentation,
                             vertical_fragmentation, horizontal_fragmentation)
-from .allocation import (Allocation, affinity_matrix, allocate,
-                         allocate_fragments, allocate_experts)
+from .allocation import (Allocation, ReplicationPlan, affinity_matrix,
+                         allocate, allocate_fragments, allocate_experts,
+                         fap_property_heat, plan_replication,
+                         replicated_edge_ids, workload_property_heat)
 from .dictionary import DataDictionary
 from .decomposition import Decomposition, decompose
 from .optimizer import JoinPlan, optimize
@@ -55,7 +57,9 @@ __all__ = [
     "Fragment", "Fragmentation", "build_fragmentation",
     "vertical_fragmentation", "horizontal_fragmentation",
     "Allocation", "affinity_matrix", "allocate", "allocate_fragments",
-    "allocate_experts", "DataDictionary", "Decomposition", "decompose",
+    "allocate_experts", "ReplicationPlan", "plan_replication",
+    "fap_property_heat", "workload_property_heat", "replicated_edge_ids",
+    "DataDictionary", "Decomposition", "decompose",
     "JoinPlan", "optimize", "CostModel", "DistributedEngine", "ExecStats",
     "QueryResult",
     "simulate_throughput", "BaselineEngine", "BaselineFragmentation",

@@ -1,8 +1,20 @@
 """Fragment allocation (§6): affinity metric, allocation graph, and the
-PNN-variant greedy clustering of Algorithm 2.
+PNN-variant greedy clustering of Algorithm 2 -- plus the beyond-paper
+budgeted **replication pass** that makes the allocator target
+shard-completeness instead of leaving it to chance.
 
 aff(F, F') = Σ_k use(Q_k, p) · use(Q_k, p')  (Def. 13) -- computed as one
 matmul U^T diag(w) U over the deduped usage matrix.
+
+Replication (``plan_replication``): the SPMD communication planner skips
+a join step's collective entirely when the step's property is
+*shard-complete* (every site holds every resident edge of it).  §6
+minimizes crossing matches but shard-completeness used to be an accident
+of allocation; following AdPart's hot-data replication and Partout's
+workload-driven placement, the pass ranks properties by workload heat
+(FAP/selection frequencies mined from the design workload) per byte of
+replicated edge rows and replicates the hottest ones to every site under
+a byte budget, so their join steps ship nothing at all.
 
 The same machinery is reused for MoE expert placement (DESIGN.md §5):
 experts are "fragments", token-level co-activation is the workload, and
@@ -11,7 +23,7 @@ Algorithm 2 clusters co-activated experts onto the same shard.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -140,6 +152,133 @@ def allocate_fragments(frag: Fragmentation, usage: np.ndarray,
     A = fragment_affinity(frag, usage, weights)
     sizes = np.array([f.size for f in frag.fragments], dtype=np.float64)
     return allocate(A, num_sites, sizes, balance_factor)
+
+
+# ----------------------------------------------------------------------
+# Budgeted replication (beyond-paper; AdPart/Partout direction)
+# ----------------------------------------------------------------------
+
+# int32 (s, p, o) per replicated edge row -- the default pricing unit,
+# the same default as the migration planner's fragment-shipping unit
+# (online.migration.BYTES_PER_EDGE); online callers with a configured
+# unit pass theirs through ``bytes_per_edge`` so replica diffs and
+# fragment moves compete in one currency
+REPLICA_BYTES_PER_EDGE = 12
+
+
+@dataclasses.dataclass
+class ReplicationPlan:
+    """Output of the budgeted replication pass.
+
+    ``props`` lists the chosen properties hottest-first; ``heat`` and
+    ``cost_bytes`` cover every *candidate* property (chosen or not) so
+    the online migration planner can re-rank diffs, and ``spent_bytes``
+    is what the chosen set costs against ``budget_bytes``.
+    """
+    props: List[int]
+    heat: Dict[int, float]          # candidate property -> workload heat
+    cost_bytes: Dict[int, int]      # candidate property -> replica bytes
+    budget_bytes: int
+    spent_bytes: int
+
+    @property
+    def prop_set(self) -> Set[int]:
+        return set(self.props)
+
+    def within_budget(self) -> bool:
+        return self.spent_bytes <= self.budget_bytes
+
+
+def workload_property_heat(queries: Sequence, weights: Optional[np.ndarray],
+                           num_properties: int) -> np.ndarray:
+    """Selection-frequency heat per property: summed (deduped) query
+    multiplicity of every query whose pattern touches the property --
+    Partout's 'how often does the workload read this data' signal."""
+    heat = np.zeros(num_properties, dtype=np.float64)
+    for i, q in enumerate(queries):
+        w = float(weights[i]) if weights is not None else 1.0
+        for prop in q.properties():
+            if 0 <= prop < num_properties:
+                heat[prop] += w
+    return heat
+
+
+def fap_property_heat(patterns: Sequence, usage: np.ndarray,
+                      weights: np.ndarray, num_properties: int) -> np.ndarray:
+    """FAP-frequency heat per property: each selected pattern
+    contributes its workload-weighted usage mass (Σ_i w_i · use(Q_i, p))
+    to every property on its edges -- the §4 mining output re-read as a
+    per-property temperature."""
+    heat = np.zeros(num_properties, dtype=np.float64)
+    if usage.size == 0:
+        return heat
+    pat_mass = weights.astype(np.float64) @ usage.astype(np.float64)
+    for j, pat in enumerate(patterns):
+        for prop in pat.properties():
+            if 0 <= prop < num_properties:
+                heat[prop] += float(pat_mass[j])
+    return heat
+
+
+def plan_replication(graph, num_sites: int, budget_bytes: int,
+                     prop_heat: np.ndarray,
+                     bytes_per_edge: float = REPLICA_BYTES_PER_EDGE
+                     ) -> ReplicationPlan:
+    """Greedy knapsack over properties: replicate the hottest properties
+    per byte of replicated edge rows to every site, while the cumulative
+    replica bytes fit ``budget_bytes``.
+
+    The cost of replicating property ``p`` is its full edge table shipped
+    to the ``num_sites - 1`` sites beyond the one canonical copy
+    (``rows(p) * bytes_per_edge * (num_sites - 1)``); heat-zero or
+    edge-less properties are never candidates.  A candidate that does
+    not fit is skipped, not a stopping point (later, cheaper properties
+    may still fit).
+
+    Args:
+        graph: the ``RDFGraph`` (per-property row counts come from it).
+        num_sites: cluster width the replicas fan out to.
+        budget_bytes: total replica bytes allowed (0 disables).
+        prop_heat: per-property workload heat
+            (``workload_property_heat`` / ``fap_property_heat``).
+        bytes_per_edge: wire bytes per replicated edge row.
+
+    Returns:
+        A ``ReplicationPlan``; ``props`` is empty when the budget is 0.
+    """
+    n_props = int(graph.num_properties)
+    heat = np.zeros(n_props, dtype=np.float64)
+    k = min(len(prop_heat), n_props)
+    heat[:k] = np.asarray(prop_heat, dtype=np.float64)[:k]
+    rows = np.bincount(np.asarray(graph.p), minlength=n_props)[:n_props]
+    cost = (rows.astype(np.float64) * float(bytes_per_edge)
+            * max(num_sites - 1, 0)).astype(np.int64)
+
+    cand = [p for p in range(n_props) if heat[p] > 0.0 and rows[p] > 0]
+    heat_d = {p: float(heat[p]) for p in cand}
+    cost_d = {p: int(cost[p]) for p in cand}
+    chosen: List[int] = []
+    spent = 0
+    # on one site every candidate costs 0 and replication is meaningless
+    # (everything already lives together) -- keep the provenance honest
+    if budget_bytes > 0 and num_sites > 1:
+        # hottest per byte first; ties broken by raw heat then prop id
+        # for determinism
+        cand.sort(key=lambda p: (-heat[p] / max(cost[p], 1), -heat[p], p))
+        for p in cand:
+            if spent + cost_d[p] <= budget_bytes:
+                chosen.append(p)
+                spent += cost_d[p]
+    return ReplicationPlan(chosen, heat_d, cost_d, int(budget_bytes), spent)
+
+
+def replicated_edge_ids(graph, props: Set[int]) -> np.ndarray:
+    """Edge ids of every replicated property -- what each site's storage
+    gains (sorted, unique by construction: one id per graph edge)."""
+    if not props:
+        return np.zeros(0, np.int64)
+    mask = np.isin(np.asarray(graph.p), np.fromiter(props, dtype=np.int64))
+    return np.nonzero(mask)[0].astype(np.int64)
 
 
 # ----------------------------------------------------------------------

@@ -157,16 +157,33 @@ class EngineBase:
             property's edge rows instead (bindings outweighed them);
             ``skipped_gathers``     -- join steps that shipped nothing
             (property shard-complete on every device);
+            ``replication_skipped_steps`` -- the subset of
+            ``skipped_gathers`` whose property is in the plan's
+            replication set (attribution by membership: a property the
+            pass chose may also have been complete from fragment
+            overlap already);
+            ``edge_cache_hits``     -- join steps that reused an earlier
+            step's gathered edge table of the same property (zero wire
+            bytes; counted in ``comm_bytes_saved``);
+            ``decimated_seed_queries`` -- queries whose step-0 property
+            was shard-complete, so the seed rows were striped across
+            the mesh (replicated storage served as partitioned work);
+            ``replicated_props``    -- properties the plan replicated
+            to every site;
             ``comm_bytes_saved``    -- ledger bytes avoided by the
-            planner's edge-ship decisions vs. always gathering.
-            The four step counters (like ``comm_bytes``) account
+            planner's edge-ship / cache-reuse decisions vs. always
+            gathering.
+            The step counters (like ``comm_bytes``) account
             *inter-device* shipping only: on a 1-device mesh no join
             step has peers to ship to or skip, so all stay 0.
 
         Adaptive (``AdaptiveEngine``):
             ``epochs`` -- closed epochs; ``repartitions`` -- re-mine +
-            migrate cycles fired; ``moved_bytes`` -- fragment bytes
-            migrated in total.
+            migrate cycles fired; ``moved_bytes`` -- fragment + replica
+            bytes migrated in total; ``replicated_props`` -- properties
+            currently replicated to every site (re-ranked on the live
+            heat at each re-partition); ``replica_bytes`` -- the subset
+            of ``moved_bytes`` spent shipping replica diffs.
 
         Returns:
             An ``EngineStats`` snapshot (``backend``/``strategy`` are

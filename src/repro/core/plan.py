@@ -34,7 +34,9 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from .allocation import Allocation, allocate_fragments
+from .allocation import (Allocation, ReplicationPlan, allocate_fragments,
+                         fap_property_heat, plan_replication,
+                         replicated_edge_ids, workload_property_heat)
 from .baselines import (BaselineEngine, BaselineFragmentation,
                         shape_fragmentation, warp_fragmentation)
 from .dictionary import DataDictionary
@@ -116,6 +118,7 @@ class PartitionConfig:
     num_cold_parts: int = 2
     balance_factor: float = 0.0       # 0 = faithful Algorithm 2
     max_rows: int = 5_000_000
+    replication_budget_bytes: int = 0  # 0 = no replication (paper-faithful)
 
     def __post_init__(self) -> None:
         if self.kind not in STRATEGIES:
@@ -124,6 +127,9 @@ class PartitionConfig:
                 f"registered strategies: {STRATEGIES.names()}")
         if self.num_sites < 1:
             raise ValueError(f"num_sites must be >= 1, got {self.num_sites}")
+        if self.replication_budget_bytes < 0:
+            raise ValueError(f"replication_budget_bytes must be >= 0, got "
+                             f"{self.replication_budget_bytes}")
 
 
 @dataclasses.dataclass
@@ -227,6 +233,12 @@ class PartitionPlan:
     weights: Optional[np.ndarray] = None     # deduped query multiplicities
     stats: Optional[OfflineStats] = None
     selection: Optional[SelectionResult] = None  # runtime-only provenance
+    # properties replicated to every site by the budgeted replication
+    # pass (their join steps are shard-complete under SPMD serving);
+    # ``replication`` is the pass's full provenance (ranking, costs,
+    # spend) and round-trips through save()/load()
+    replicated_props: Set[int] = dataclasses.field(default_factory=set)
+    replication: Optional[ReplicationPlan] = None
 
     # -- basic facts ----------------------------------------------------
     @property
@@ -249,16 +261,27 @@ class PartitionPlan:
         """Edge ids resident per site -- the uniform storage view every
         backend can consume (SPMD SiteStore, baseline engine).  Hot
         fragments follow the allocation; cold fragments ride round-robin
-        exactly as in ``DataDictionary.build``."""
+        exactly as in ``DataDictionary.build``; edges of
+        ``replicated_props`` land on *every* site (that is what makes
+        those properties shard-complete under SPMD serving)."""
         if self.baseline_frag is not None:
-            return list(self.baseline_frag.site_edges)
-        if self.frag is None or self.alloc is None:
-            raise RuntimeError("plan holds no fragmentation/allocation")
-        per_site: List[List[np.ndarray]] = [[] for _ in range(self.num_sites)]
-        for fi, f in enumerate(self.frag.fragments):
-            per_site[int(self.alloc.site_of[fi])].append(f.edge_ids)
-        for k, f in enumerate(self.frag.cold_fragments):
-            per_site[k % self.num_sites].append(f.edge_ids)
+            per_site = [[np.asarray(e, np.int64)]
+                        for e in self.baseline_frag.site_edges]
+        else:
+            if self.frag is None or self.alloc is None:
+                raise RuntimeError("plan holds no fragmentation/allocation")
+            per_site = [[] for _ in range(self.num_sites)]
+            for fi, f in enumerate(self.frag.fragments):
+                per_site[int(self.alloc.site_of[fi])].append(f.edge_ids)
+            for k, f in enumerate(self.frag.cold_fragments):
+                per_site[k % self.num_sites].append(f.edge_ids)
+        if self.replicated_props:
+            if self.graph is None:
+                raise RuntimeError("plan has no attached graph to "
+                                   "materialize replicated properties from")
+            rep = replicated_edge_ids(self.graph, self.replicated_props)
+            for g in per_site:
+                g.append(rep)
         return [np.unique(np.concatenate(g)) if g
                 else np.zeros(0, np.int64) for g in per_site]
 
@@ -306,6 +329,11 @@ class PartitionPlan:
             raise RuntimeError("plan has no attached graph")
         if self.baseline_frag is not None:
             bf = self.baseline_frag
+            if self.replicated_props:
+                # replicated edges are part of the uniform storage view
+                # (site_edge_ids); rebuild so every backend serves the
+                # same per-site storage
+                bf = BaselineFragmentation(self.site_edge_ids(), bf.name)
         else:
             bf = BaselineFragmentation(self.site_edge_ids(),
                                        f"PLAN:{self.strategy}")
@@ -336,13 +364,18 @@ class PartitionPlan:
 
         Returns:
             A ready ``SpmdEngine`` (implements the ``Engine`` protocol).
+            The plan's ``replicated_props`` ride along: their edges are
+            in every site's storage (``site_edge_ids``), so the engine
+            detects them shard-complete and skips their join-step
+            collectives.
         """
         if self.graph is None:
             raise RuntimeError("plan has no attached graph")
         from .spmd import SpmdEngine   # lazy: keeps jax off the plan path
         return SpmdEngine(self.graph, self.site_edge_ids(), mesh=mesh,
                           axis=axis, capacity=capacity, cost=cost,
-                          max_capacity=max_capacity, comm_plan=comm_plan)
+                          max_capacity=max_capacity, comm_plan=comm_plan,
+                          replicated_props=set(self.replicated_props))
 
     # -- serialization (built on repro.checkpoint) ----------------------
     def save(self, path) -> Path:
@@ -365,6 +398,18 @@ class PartitionPlan:
                       if self.stats is not None else None),
         }
         arrays["cold_props"] = np.asarray(sorted(self.cold_props), np.int64)
+        arrays["replicated_props"] = np.asarray(
+            sorted(self.replicated_props), np.int64)
+        if self.replication is not None:
+            meta["replication"] = {
+                "props": [int(p) for p in self.replication.props],
+                "budget_bytes": self.replication.budget_bytes,
+                "spent_bytes": self.replication.spent_bytes,
+                "heat": {str(p): h
+                         for p, h in self.replication.heat.items()},
+                "cost_bytes": {str(p): c
+                               for p, c in self.replication.cost_bytes
+                               .items()}}
         if self.design_workload is not None:
             arrays["design_workload"] = encode_queries(
                 self.design_workload.queries)
@@ -442,6 +487,14 @@ class PartitionPlan:
                 b["name"])
         stats = (OfflineStats(**meta["stats"])
                  if meta.get("stats") is not None else None)
+        replication = None
+        if meta.get("replication") is not None:
+            r = meta["replication"]
+            replication = ReplicationPlan(
+                [int(p) for p in r["props"]],
+                {int(p): float(h) for p, h in r["heat"].items()},
+                {int(p): int(c) for p, c in r["cost_bytes"].items()},
+                int(r["budget_bytes"]), int(r["spent_bytes"]))
         wl = (Workload(decode_queries(arrays["design_workload"]))
               if "design_workload" in arrays else None)
         return PartitionPlan(
@@ -451,7 +504,11 @@ class PartitionPlan:
             cold_props=set(int(p) for p in arrays["cold_props"]),
             baseline_frag=baseline, design_workload=wl,
             sel_usage=arrays.get("sel_usage"), weights=arrays.get("weights"),
-            stats=stats)
+            stats=stats,
+            # PR-4-era plans predate replication: missing field -> empty
+            replicated_props=set(
+                int(p) for p in arrays.get("replicated_props", ())),
+            replication=replication)
 
     # -- equality (dtype-insensitive on arrays) --------------------------
     def _state(self) -> Tuple:
@@ -488,6 +545,7 @@ class PartitionPlan:
             if self.design_workload is not None else None,
             af(self.sel_usage),
             ai(self.weights) if self.weights is not None else None,
+            tuple(sorted(self.replicated_props)),
         )
 
     def __eq__(self, other: object) -> bool:
@@ -562,10 +620,37 @@ def _mine_and_select(graph: RDFGraph, workload: Workload,
 # Registered strategies
 # ----------------------------------------------------------------------
 
+def _replication_pass(graph: RDFGraph, cfg: PartitionConfig,
+                      workload: Optional[Workload] = None,
+                      patterns: Optional[Sequence[QueryGraph]] = None,
+                      usage: Optional[np.ndarray] = None,
+                      weights: Optional[np.ndarray] = None
+                      ) -> Optional[ReplicationPlan]:
+    """The budgeted replication pass shared by every strategy: heat from
+    the selected FAPs' workload-weighted usage when the strategy mined
+    any, else from the raw design workload's per-property selection
+    frequencies.  ``None`` when the budget knob is 0 (paper-faithful)."""
+    if cfg.replication_budget_bytes <= 0:
+        return None
+    heat = None
+    if patterns is not None and usage is not None and weights is not None \
+            and len(patterns):
+        heat = fap_property_heat(patterns, usage, weights,
+                                 graph.num_properties)
+    if (heat is None or not heat.any()) and workload is not None:
+        uniq, w = workload.dedup_normalized()
+        heat = workload_property_heat(uniq, w, graph.num_properties)
+    if heat is None:
+        return None
+    return plan_replication(graph, cfg.num_sites,
+                            cfg.replication_budget_bytes, heat)
+
+
 def _workload_driven_plan(graph: RDFGraph, workload: Workload,
                           cfg: PartitionConfig) -> PartitionPlan:
     """The paper's pipeline: mine -> select -> fragment -> allocate ->
-    dictionary (vertical §5.1 or horizontal §5.2 per ``cfg.kind``)."""
+    dictionary (vertical §5.1 or horizontal §5.2 per ``cfg.kind``),
+    plus the budgeted replication pass when the config asks for one."""
     ms = _mine_and_select(graph, workload, cfg)
     theta = max(int(len(workload) * cfg.theta_fraction), 1)
 
@@ -585,12 +670,16 @@ def _workload_driven_plan(graph: RDFGraph, workload: Workload,
         ms.mine_sec, ms.select_sec, t_frag, t_alloc, ms.num_mined,
         len(ms.selection.selected), len(frag.fragments),
         frag.redundancy_ratio(graph), ms.hit_rate, ms.selection.benefit)
+    repl = _replication_pass(graph, cfg, workload, ms.selected_patterns,
+                             ms.sel_usage, ms.weights)
     return PartitionPlan(
         strategy=cfg.kind, config=cfg, graph=graph,
         selected_patterns=ms.selected_patterns, frag=frag, alloc=alloc,
         dictionary=dictionary, cold_props=ms.cold_props,
         design_workload=workload, sel_usage=ms.sel_usage,
-        weights=ms.weights, stats=stats, selection=ms.selection)
+        weights=ms.weights, stats=stats, selection=ms.selection,
+        replicated_props=(repl.prop_set if repl is not None else set()),
+        replication=repl)
 
 
 @register_strategy("vertical")
@@ -608,10 +697,16 @@ def _horizontal(graph: RDFGraph, workload: Workload,
 @register_strategy("shape")
 def _shape(graph: RDFGraph, workload: Workload,
            cfg: PartitionConfig) -> PartitionPlan:
-    """SHAPE baseline (§8.1): workload-oblivious subject-object hashing."""
+    """SHAPE baseline (§8.1): workload-oblivious subject-object hashing.
+    The replication pass (workload-heat ranked) still applies: hashing
+    decides residency, replication tops up the hottest properties."""
     bf = shape_fragmentation(graph, cfg.num_sites)
+    repl = _replication_pass(graph, cfg, workload)
     return PartitionPlan(strategy="shape", config=cfg, graph=graph,
-                         baseline_frag=bf, design_workload=workload)
+                         baseline_frag=bf, design_workload=workload,
+                         replicated_props=(repl.prop_set if repl is not None
+                                           else set()),
+                         replication=repl)
 
 
 @register_strategy("warp")
@@ -622,12 +717,17 @@ def _warp(graph: RDFGraph, workload: Workload,
     ms = _mine_and_select(graph, workload, cfg)
     bf, _part = warp_fragmentation(graph, cfg.num_sites,
                                    ms.selected_patterns)
+    repl = _replication_pass(graph, cfg, workload, ms.selected_patterns,
+                             ms.sel_usage, ms.weights)
     return PartitionPlan(strategy="warp", config=cfg, graph=graph,
                          selected_patterns=ms.selected_patterns,
                          baseline_frag=bf, design_workload=workload,
                          sel_usage=ms.sel_usage, weights=ms.weights,
                          cold_props=ms.cold_props,
-                         selection=ms.selection)
+                         selection=ms.selection,
+                         replicated_props=(repl.prop_set if repl is not None
+                                           else set()),
+                         replication=repl)
 
 
 # ----------------------------------------------------------------------

@@ -28,7 +28,12 @@ objective, the ROADMAP's size-aware broadcast-join item):
   (static metadata): the smaller side is gathered.  Shipping edges
   keeps every binding where it is and expands it against the gathered
   global edge table -- exactly equivalent, cheaper when bindings
-  outgrow the property.
+  outgrow the property.  A gathered table is cached across the steps
+  of one query that share a property (reuse is free), and a query
+  whose step-0 property is shard-complete stripes its seeds across
+  the mesh (seed decimation), so storage replicated by the
+  allocation-aware replication pass serves as balanced partitioned
+  work.
 
 All decisions are trace-time static in *shape* (a ``lax.cond`` between
 equal-shape branches), so the shape-keyed jit cache and the capacity
@@ -178,9 +183,10 @@ class SiteStore:
 # ----------------------------------------------------------------------
 
 # decision codes, as reported in the matcher's per-step decision vector
-COMM_GATHER = 0   # shipped the binding tables (all_gather + dedup)
-COMM_EDGE = 1     # shipped the step property's edge rows instead
-COMM_SKIP = 2     # shipped nothing (shard-complete property / 1 device)
+COMM_GATHER = 0       # shipped the binding tables (all_gather + dedup)
+COMM_EDGE = 1         # shipped the step property's edge rows instead
+COMM_SKIP = 2         # shipped nothing (shard-complete property / 1 device)
+COMM_EDGE_CACHED = 3  # reused an earlier step's gathered edge table
 
 
 def bind_row_bytes(num_cols: int) -> int:
@@ -236,6 +242,34 @@ def plan_step_comm(store: SiteStore, pattern: QueryGraph,
             cap = int(np.ceil(max(per_dev, 1) / 8) * 8)
             specs.append(StepComm("dynamic", prop, cap, total))
     return tuple(specs)
+
+
+def plan_seed_decimation(store: SiteStore, pattern: QueryGraph) -> bool:
+    """Should the matcher decimate the seed rows of step 0 across
+    devices?  True when step 0's property is shard-complete: every
+    device holds the identical (identically sorted) seed table, so each
+    keeping every ``m``-th row partitions the seeds exactly -- replicated
+    storage becomes balanced partitioned work instead of ``m`` devices
+    duplicating every seed (which would inflate every downstream
+    binding count and the final gather ``m``-fold).
+
+    Striping by rank is only exact when every device's stored rows of
+    the property are duplicate-free (rows == distinct ids per device;
+    ``SpmdEngine`` guarantees it by unique-ing every folded site list,
+    but a directly-built ``SiteStore`` may not), so duplicated rows
+    disable decimation rather than risk dropping a seed."""
+    order = _connected_edge_order(pattern)
+    if not order:
+        return False
+    prop = pattern.edges[order[0]].prop
+    if not store.prop_shard_complete(prop):
+        return False
+    if store.prop_dev_rows is not None \
+            and 0 <= prop < store.prop_dev_rows.shape[1] \
+            and not np.array_equal(store.prop_dev_rows[:, prop],
+                                   store.prop_dev_distinct[:, prop]):
+        return False
+    return True
 
 
 # ----------------------------------------------------------------------
@@ -396,7 +430,8 @@ def pattern_var_order(pattern: QueryGraph) -> List[int]:
 def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
                  pattern: QueryGraph, capacity: int,
                  axis: Optional[str] = None,
-                 comm: Optional[Sequence[StepComm]] = None
+                 comm: Optional[Sequence[StepComm]] = None,
+                 axis_size: int = 1, seed_decimate: bool = False
                  ) -> Tuple[jax.Array, jax.Array, List[int], jax.Array,
                             jax.Array, jax.Array]:
     """Match ``pattern`` over one shard's edge table, padded to
@@ -416,7 +451,11 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
       compacted into a static buffer and all_gather-ed instead, and the
       *local* bindings expand against the global edge table -- exactly
       equivalent, chosen in-trace (``lax.cond``) when the psum'd global
-      binding count outweighs the property's resident rows;
+      binding count outweighs the property's resident rows.  The
+      gathered global table is *cached across steps of this trace*:
+      a later join step on the same property reuses it instead of
+      re-gathering (decision code ``COMM_EDGE_CACHED``, zero wire
+      bytes);
     * **skip**: the property is shard-complete, so the local edge table
       already is the global one -- no collective at all.
 
@@ -424,7 +463,10 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
     exactly the set of partial matches of the covered pattern prefix
     against the whole (distributed) graph.  With ``axis=None`` the loop
     is purely shard-local (single-device case; identical math, gathers
-    skipped, decisions all ``COMM_SKIP``).
+    skipped, decisions all ``COMM_SKIP``).  ``axis_size`` (static mesh
+    extent) sizes the cache stand-in buffers.  ``seed_decimate`` (see
+    ``plan_seed_decimation``) is only valid when step 0's property is
+    shard-complete on every device.
 
     jit-friendly: static pattern, static capacity, static per-step
     specs; overflow (result rows beyond capacity at any step) is
@@ -444,6 +486,10 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
     ovf = jnp.int32(0)
     decs: List[jax.Array] = []
     rows: List[jax.Array] = []
+    # cross-step edge-gather cache: prop -> (keys(s), payload(o), have).
+    # ``have`` derives only from psum'd predicates, so it is uniform
+    # across devices and safe as a lax.cond predicate.
+    edge_cache: Dict[int, Tuple[jax.Array, jax.Array, jax.Array]] = {}
 
     for step, ei in enumerate(order):
         e = edges[ei]
@@ -459,6 +505,14 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
                 sel &= o == e.dst
             if e.src < 0 and e.src == e.dst:
                 sel &= s == o
+            if seed_decimate and axis is not None:
+                # step 0's property is shard-complete: every device sees
+                # the identical, identically-ordered seed list, so each
+                # keeping every m-th row partitions the seeds exactly
+                # (balanced work, no cross-device duplicates, no m-fold
+                # blowup of downstream binding counts)
+                rank = jnp.cumsum(sel) - 1
+                sel &= (rank % axis_size) == jax.lax.axis_index(axis)
             (s_col, o_col), valid = compact_rows(sel, (s, o), capacity,
                                                  fill=-1)
             ovf = jnp.maximum(
@@ -479,18 +533,42 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
                 else sc.mode if sc is not None else "gather")
         n_in = len(var_cols)          # binding columns entering the step
 
+        # cross-step cache state for this step's property ("dynamic"
+        # steps only: "skip" never gathers, "gather" never ships edges)
+        cache = edge_cache.get(e.prop) if mode == "dynamic" else None
+        have0 = cache[2] if cache is not None else jnp.bool_(False)
+
         # -- shared builders for this step (all shapes static) ----------
         def local_pair_tables():
             sel_ = p == e.prop
             return jnp.where(sel_, s, imax), jnp.where(sel_, o, imax)
 
-        def gathered_prop_tables():
+        def fresh_prop_tables():
             # the edge-shipping side: compact this device's rows of the
             # property, gather every device's buffer (rows this device
             # lacks arrive from wherever they are resident)
             (ls, lo_), _ = compact_rows(p == e.prop, (s, o), sc.gather_cap)
             return (jax.lax.all_gather(ls, axis, tiled=True),
                     jax.lax.all_gather(lo_, axis, tiled=True))
+
+        def gathered_prop_tables():
+            # reuse an earlier step's gather of the same property when
+            # this trace already holds one; gather fresh otherwise
+            if cache is None:
+                return fresh_prop_tables()
+            return jax.lax.cond(have0, lambda: (cache[0], cache[1]),
+                                fresh_prop_tables)
+
+        def carry_prop_tables():
+            # equal-shape stand-ins the binding-gather branch returns so
+            # both lax.cond branches agree; an incumbent cache entry is
+            # carried through unchanged (stand-ins are only ever stored
+            # with have=False and never read back as tables)
+            if cache is not None:
+                return cache[0], cache[1]
+            rows_ = axis_size * sc.gather_cap
+            return (jnp.full((rows_,), imax, jnp.int32),
+                    jnp.full((rows_,), imax, jnp.int32))
 
         def gathered_bindings(bt, vt):
             gb = jax.lax.all_gather(bt, axis, tiled=True)
@@ -506,13 +584,25 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
             # edge_bytes can exceed int32 as a trace-time constant;
             # mantissa rounding is harmless for a heuristic.  The byte
             # formulas are the ledger's (bind_row_bytes / edge_bytes),
-            # so decision and accounting cannot diverge.
+            # so decision and accounting cannot diverge.  Both branches
+            # return the (possibly stand-in) global edge tables last, so
+            # the cross-step cache survives the cond; a cached table
+            # makes the edge side free (COMM_EDGE_CACHED, zero bytes),
+            # which the predicate accounts for.
             n_glob = jax.lax.psum(valid.sum().astype(jnp.int32), axis)
-            pred = (n_glob.astype(jnp.float32) * float(bind_row_bytes(n_in))
-                    <= jnp.float32(sc.edge_bytes))
+            gather_cost = n_glob.astype(jnp.float32) \
+                * float(bind_row_bytes(n_in))
+            edge_cost = jnp.where(have0, jnp.float32(0.0),
+                                  jnp.float32(sc.edge_bytes))
+            pred = gather_cost <= edge_cost
             out = jax.lax.cond(pred, via_gather, via_edges, bind, valid)
-            dec = jnp.where(pred, COMM_GATHER, COMM_EDGE).astype(jnp.int32)
-            return out, dec, n_glob
+            *res, c_ts, c_to = out
+            edge_cache[e.prop] = (c_ts, c_to, have0 | ~pred)
+            dec = jnp.where(
+                pred, COMM_GATHER,
+                jnp.where(have0, COMM_EDGE_CACHED, COMM_EDGE)
+            ).astype(jnp.int32)
+            return tuple(res), dec, n_glob
 
         if s_known and d_known:
             # cycle close: membership of the bound (src, dst) pair among
@@ -534,11 +624,15 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
                     gb, pair_keep(gb, gv, t_s, t_o), capacity)
                 return nb, nv, over, shipped
 
+            def pair_via_gather_c(bt, vt):
+                c_ts, c_to = carry_prop_tables()
+                return pair_via_gather(bt, vt) + (c_ts, c_to)
+
             def pair_via_edges(bt, vt):
                 t_s, t_o = gathered_prop_tables()
                 keep = pair_keep(bt, vt, t_s, t_o)
                 return (jnp.where(keep[:, None], bt, -1), keep,
-                        jnp.int32(0), jnp.int32(sc.edge_rows))
+                        jnp.int32(0), jnp.int32(sc.edge_rows), t_s, t_o)
 
             if mode == "skip":
                 t_s, t_o = local_pair_tables()
@@ -551,7 +645,7 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
                 dec_v, row_v = jnp.int32(COMM_GATHER), shipped
             else:  # dynamic: ship the smaller side
                 (bind, valid, over, _), dec_v, row_v = ship_smaller_side(
-                    pair_via_gather, pair_via_edges)
+                    pair_via_gather_c, pair_via_edges)
             ovf = jnp.maximum(ovf, over)
         else:
             # expansion: probe the known endpoint against the property's
@@ -579,6 +673,10 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
                     gb, gv, probe_vals(gb), keys, payload, capacity)
                 return nb, nc, nv, over, shipped
 
+            def exp_via_gather_c(bt, vt):
+                c_ts, c_to = carry_prop_tables()
+                return exp_via_gather(bt, vt) + (c_ts, c_to)
+
             def exp_via_edges(bt, vt):
                 g_s, g_o = gathered_prop_tables()
                 gk, gp = (g_s, g_o) if s_known else (g_o, g_s)
@@ -586,7 +684,7 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
                 nb, nc, nv, over = _expand_fixed(
                     bt, vt, probe_vals(bt), gk[gorder], gp[gorder],
                     capacity)
-                return nb, nc, nv, over, jnp.int32(sc.edge_rows)
+                return nb, nc, nv, over, jnp.int32(sc.edge_rows), g_s, g_o
 
             if mode == "skip":
                 keys, payload = local_table()
@@ -599,7 +697,7 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
                 dec_v, row_v = jnp.int32(COMM_GATHER), shipped
             else:  # dynamic: ship the smaller side
                 (bind, new_col, valid, over, _), dec_v, row_v = \
-                    ship_smaller_side(exp_via_gather, exp_via_edges)
+                    ship_smaller_side(exp_via_gather_c, exp_via_edges)
             ovf = jnp.maximum(ovf, over)
             new_var = e.dst if s_known else e.src
             if new_var < 0:
@@ -650,7 +748,8 @@ def compat_shard_map(fn, mesh, in_specs, out_specs):
 
 def make_spmd_matcher(mesh: Mesh, axis: str, pattern: QueryGraph,
                       capacity: int,
-                      comm: Optional[Sequence[StepComm]] = None):
+                      comm: Optional[Sequence[StepComm]] = None,
+                      seed_decimate: bool = False):
     """Build a jitted SPMD function: site-sharded (s,p,o) -> gathered
     binding tables (num_sites * capacity, V), validity mask, the
     per-device overflow row count (num_sites,), and the planner's
@@ -662,16 +761,25 @@ def make_spmd_matcher(mesh: Mesh, axis: str, pattern: QueryGraph,
     results'); those bytes are what the §Roofline collective term
     counts.  A non-zero overflow entry means that device's table filled
     and the caller must retry at a higher capacity for an exact answer.
+
+    ``seed_decimate=True`` asserts step 0's property is shard-complete
+    (``plan_seed_decimation``): the seed rows are then striped across
+    the mesh so replicated storage becomes partitioned work -- without
+    it every device would duplicate every seed and the answer would
+    ship ``m`` times.  Only valid when the completeness assertion
+    holds.
     """
     # on a 1-device mesh the per-step gathers are identity and the
     # gathered dedup can never find anything (folded site groups are
     # unique'd at store build) -- skip both, keeping the shard-local
     # fast path; the mesh size is static at trace time.
-    step_axis = axis if int(np.prod(mesh.devices.shape)) > 1 else None
+    m = int(np.prod(mesh.devices.shape))
+    step_axis = axis if m > 1 else None
 
     def per_site(s, p, o):
         bind, valid, cols, ovf, dec, rows = _match_shard(
-            s[0], p[0], o[0], pattern, capacity, axis=step_axis, comm=comm)
+            s[0], p[0], o[0], pattern, capacity, axis=step_axis, comm=comm,
+            axis_size=m, seed_decimate=seed_decimate)
         g_bind = jax.lax.all_gather(bind, axis, tiled=True)
         g_valid = jax.lax.all_gather(valid, axis, tiled=True)
         g_ovf = jax.lax.all_gather(ovf[None], axis, tiled=True)
@@ -732,7 +840,15 @@ class SpmdEngine(EngineBase):
     planned size-aware (see ``plan_step_comm`` / ``_match_shard``):
     shard-complete properties skip the collective entirely, and
     otherwise the smaller of global-bindings vs. property-edge-rows is
-    shipped.  ``stats().comm_bytes`` accounts the data-plane bytes
+    shipped.  Two further mechanisms ride on that: a gathered edge
+    table is cached across the join steps of one query that share a
+    property (``COMM_EDGE_CACHED``: reuse is free), and a query whose
+    step-0 property is shard-complete stripes its seed rows across the
+    mesh (``plan_seed_decimation``) so replicated storage -- e.g. from
+    the plan's allocation-aware replication pass, whose property set
+    arrives via ``replicated_props`` -- runs as balanced partitioned
+    work instead of every device duplicating the whole query.
+    ``stats().comm_bytes`` accounts the data-plane bytes
     actually put on the wire (valid binding rows / resident edge rows
     to each of the ``m - 1`` peers; control scalars such as the
     planner's psum'd binding count are not ledgered, matching the host
@@ -748,9 +864,16 @@ class SpmdEngine(EngineBase):
                  mesh: Optional[Mesh] = None, axis: str = "sites",
                  capacity: int = 4096, cost: Optional[CostModel] = None,
                  max_capacity: Optional[int] = None,
-                 comm_plan: bool = True):
+                 comm_plan: bool = True,
+                 replicated_props: Optional[set] = None):
         self._init_engine_base()
         self.graph = graph
+        # provenance from the allocation-aware replication pass: which
+        # properties the plan replicated to every site.  Residency
+        # metadata (not this set) is what *detects* shard-completeness;
+        # the set only attributes skip decisions to replication in the
+        # stats counters.
+        self.replicated_props = set(replicated_props or ())
         self.logical_sites = len(site_edge_ids)
         if mesh is None:
             from ..launch.mesh import make_host_mesh
@@ -776,6 +899,9 @@ class SpmdEngine(EngineBase):
         self._matchers: Dict[Tuple[Tuple, int], object] = {}
         # per-pattern static communication specs (planner output)
         self._comm_specs: Dict[Tuple, Tuple[StepComm, ...]] = {}
+        # per-pattern seed-decimation decision (store + planner mode are
+        # fixed per engine, so the boolean is too)
+        self._seed_decim: Dict[Tuple, bool] = {}
         # last capacity tier that answered this edge structure exactly:
         # repeat queries start the retry ladder there instead of
         # re-climbing (and re-executing) every lower tier
@@ -787,6 +913,9 @@ class SpmdEngine(EngineBase):
         self._bump("edge_shipped_steps", 0)
         self._bump("skipped_gathers", 0)
         self._bump("comm_bytes_saved", 0)
+        self._bump("replication_skipped_steps", 0)
+        self._bump("edge_cache_hits", 0)
+        self._bump("decimated_seed_queries", 0)
 
     @property
     def num_sites(self) -> int:
@@ -804,12 +933,27 @@ class SpmdEngine(EngineBase):
             self._comm_specs[pattern.edges] = spec
         return spec
 
+    def _seed_decimation(self, pattern: QueryGraph) -> bool:
+        """Cached ``plan_seed_decimation`` for this pattern.  Decimation
+        is part of the planned-serving mode: with the planner off the
+        engine must reproduce the naive gather-every-step baseline
+        exactly (bench_spmd_comm's spmd_naive arm, the PR-3/PR-4
+        ledger semantics)."""
+        dec = self._seed_decim.get(pattern.edges)
+        if dec is None:
+            dec = self.comm_plan and plan_seed_decimation(self.store,
+                                                          pattern)
+            self._seed_decim[pattern.edges] = dec
+        return dec
+
     def _matcher(self, pattern: QueryGraph, capacity: int):
         key = (pattern.edges, capacity)
         fn = self._matchers.get(key)
         if fn is None:
             fn = make_spmd_matcher(self.mesh, self.axis, pattern, capacity,
-                                   comm=self._comm_spec(pattern))
+                                   comm=self._comm_spec(pattern),
+                                   seed_decimate=self._seed_decimation(
+                                       pattern))
             self._matchers[key] = fn
             self._compiles += 1
         return fn
@@ -893,6 +1037,8 @@ class SpmdEngine(EngineBase):
         spec = self._comm_spec(norm)
         comm = 0
         if m > 1:               # 1 device: no peers, nothing ever ships
+            if self._seed_decimation(norm):
+                self._bump("decimated_seed_queries")
             for dec, srows, n_final in attempts:
                 for ji, sc in enumerate(spec):
                     d, r = int(dec[ji]), int(srows[ji])
@@ -906,8 +1052,17 @@ class SpmdEngine(EngineBase):
                         self._bump("comm_bytes_saved",
                                    (m - 1) * (r * row_bytes
                                               - sc.edge_bytes))
+                    elif d == COMM_EDGE_CACHED:
+                        # the global edge table was already live in this
+                        # trace: nothing on the wire, the whole binding
+                        # gather avoided
+                        self._bump("edge_cache_hits")
+                        self._bump("comm_bytes_saved",
+                                   (m - 1) * r * row_bytes)
                     else:
                         self._bump("skipped_gathers")
+                        if sc.prop in self.replicated_props:
+                            self._bump("replication_skipped_steps")
                 comm += (m - 1) * n_final * bind_row_bytes(V)
         elapsed = time.perf_counter() - t0
         stats = ExecStats(elapsed, int(comm),
@@ -918,4 +1073,5 @@ class SpmdEngine(EngineBase):
     def _stats_extra(self) -> Dict[str, float]:
         return {"compiled_shapes": float(self._compiles),
                 "devices": float(self.store.num_sites),
-                "comm_planner": float(self.comm_plan)}
+                "comm_planner": float(self.comm_plan),
+                "replicated_props": float(len(self.replicated_props))}

@@ -114,6 +114,13 @@ class AdaptiveEngine(EngineBase):
         self.selected_patterns: List[QueryGraph] = \
             list(plan.selected_patterns)
         self.cold_props: Set[int] = set(plan.cold_props)
+        # live replication state (allocation-aware replication pass);
+        # re-ranked on the monitor heat at every re-partition, diffs
+        # shipped within the migration budget.  The wrapped host engine
+        # does not read it (replication pays off on the SPMD backend);
+        # it is kept current so the adapted placement can be served by
+        # an SPMD rebuild -- the ROADMAP's adaptive-SPMD open item.
+        self.replicated_props: Set[int] = set(plan.replicated_props)
         self.engine = plan.build_local_engine(cost)
 
         self.monitor = WorkloadMonitor(self.graph.num_properties,
@@ -133,6 +140,7 @@ class AdaptiveEngine(EngineBase):
         self.epochs: List[EpochReport] = []
         self.total_comm_bytes = 0
         self.total_moved_bytes = 0
+        self.total_replica_bytes = 0
         self.num_repartitions = 0
         self._epoch_queries = 0
         self._epoch_comm = 0
@@ -179,7 +187,9 @@ class AdaptiveEngine(EngineBase):
     def _stats_extra(self):
         return {"epochs": float(self.epoch),
                 "repartitions": float(self.num_repartitions),
-                "moved_bytes": float(self.total_moved_bytes)}
+                "moved_bytes": float(self.total_moved_bytes),
+                "replicated_props": float(len(self.replicated_props)),
+                "replica_bytes": float(self.total_replica_bytes)}
 
     # ------------------------------------------------------------------
     def end_epoch(self) -> EpochReport:
@@ -222,12 +232,15 @@ class AdaptiveEngine(EngineBase):
     # ------------------------------------------------------------------
     def _repartition(self) -> MigrationPlan:
         res: RefragmentResult = refragment(
-            self.graph, self.monitor, self.pcfg, self.selected_patterns)
+            self.graph, self.monitor, self.pcfg, self.selected_patterns,
+            replica_bytes_per_edge=self.cfg.bytes_per_edge)
         aff = fragment_affinity(res.frag, res.sel_usage, res.weights)
         plan = plan_migration(self.frag, self.alloc, res.frag,
                               res.desired_alloc, aff,
                               self.cfg.migration_budget_bytes,
-                              self.cfg.bytes_per_edge)
+                              self.cfg.bytes_per_edge,
+                              old_replicated=self.replicated_props,
+                              desired_replication=res.desired_replication)
         realized = Allocation(plan.final_site_of, self.pcfg.num_sites)
         dictionary = DataDictionary.build(self.graph, res.frag, realized,
                                           self.pcfg.num_sites)
@@ -235,11 +248,13 @@ class AdaptiveEngine(EngineBase):
         self.alloc = realized
         self.selected_patterns = res.selected_patterns
         self.cold_props = res.cold_props
+        self.replicated_props = set(plan.replicated_props)
         self.engine = DistributedEngine(self.graph, res.frag, realized,
                                         dictionary, res.cold_props,
                                         self.cost)
         self._install_hook()
         self.detector.set_reference(self.monitor, self.selected_patterns)
         self.total_moved_bytes += plan.moved_bytes
+        self.total_replica_bytes += plan.replica_bytes
         self.num_repartitions += 1
         return plan

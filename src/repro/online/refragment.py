@@ -27,11 +27,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Sequence, Set
+from typing import List, Optional, Sequence, Set
 
 import numpy as np
 
-from ..core.allocation import Allocation, allocate_fragments
+from ..core.allocation import (Allocation, ReplicationPlan,
+                               allocate_fragments, plan_replication,
+                               workload_property_heat)
 from ..core.fragmentation import (Fragmentation, horizontal_fragmentation,
                                   vertical_fragmentation)
 from ..core.graph import RDFGraph
@@ -55,6 +57,10 @@ class RefragmentResult:
     num_mined: int
     num_incumbents_kept: int
     elapsed_sec: float
+    # desired replication set re-ranked on the live heat (None when the
+    # config's replication budget is 0); the migration planner decides
+    # how much of the diff to ship this epoch
+    desired_replication: Optional[ReplicationPlan] = None
 
 
 def warm_mine(uniq: Sequence[QueryGraph], weights: np.ndarray, min_sup: int,
@@ -79,8 +85,14 @@ def warm_mine(uniq: Sequence[QueryGraph], weights: np.ndarray, min_sup: int,
 
 def refragment(graph: RDFGraph, monitor: WorkloadMonitor,
                config: PartitionConfig,
-               incumbent_patterns: Sequence[QueryGraph]) -> RefragmentResult:
-    """One re-partitioning pass over the monitor's live distribution."""
+               incumbent_patterns: Sequence[QueryGraph],
+               replica_bytes_per_edge: Optional[float] = None
+               ) -> RefragmentResult:
+    """One re-partitioning pass over the monitor's live distribution.
+    ``replica_bytes_per_edge`` prices the desired replication set in the
+    caller's shipping unit (``AdaptiveConfig.bytes_per_edge``), so
+    replica diffs and fragment moves compete in the same currency
+    inside the migration budget; default: the offline pass's unit."""
     t0 = time.perf_counter()
     cfg = config
     uniq, weights = monitor.snapshot()
@@ -140,6 +152,17 @@ def refragment(graph: RDFGraph, monitor: WorkloadMonitor,
     # (post-migration-budget) placement ---
     alloc = allocate_fragments(frag, sel_U, weights, cfg.num_sites,
                                cfg.balance_factor)
+
+    # --- replication (beyond-paper): re-rank the replicated property
+    # set on the *live* heat, same budget knob as the offline pass; the
+    # migration planner ships the diff within its own byte budget ---
+    repl = None
+    if cfg.replication_budget_bytes > 0:
+        heat = workload_property_heat(uniq, weights, graph.num_properties)
+        kw = ({"bytes_per_edge": float(replica_bytes_per_edge)}
+              if replica_bytes_per_edge is not None else {})
+        repl = plan_replication(graph, cfg.num_sites,
+                                cfg.replication_budget_bytes, heat, **kw)
     return RefragmentResult(frag, alloc, selected, cold_props,
                             sel_U, weights, len(fps), kept,
-                            time.perf_counter() - t0)
+                            time.perf_counter() - t0, repl)

@@ -1,0 +1,117 @@
+"""Seeded graph / workload / query-shape generators shared by the
+differential exactness harness (tests/test_spmd_exactness.py) and the
+property-based fuzz harness (tests/test_fuzz_parity.py).
+
+Everything is driven by explicit seeds (or an explicit
+``numpy.random.Generator``), so both harnesses stay deterministic and a
+failing case can be replayed from its parameters alone.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph import RDFGraph
+from repro.core.matching import match_pattern
+from repro.core.query import QueryGraph
+
+# defaults of the exactness harness (kept for its literal regressions)
+N_VERTS, N_PROPS, N_EDGES = 150, 6, 400
+SEED = 1234
+
+
+def random_graph(seed: int = SEED, n_verts: int = N_VERTS,
+                 n_props: int = N_PROPS, n_edges: int = N_EDGES) -> RDFGraph:
+    """Uniform random triple table, deduped (edge count may come out a
+    little under ``n_edges``)."""
+    rng = np.random.default_rng(seed)
+    s = rng.integers(0, n_verts, n_edges)
+    p = rng.integers(0, n_props, n_edges)
+    o = rng.integers(0, n_verts, n_edges)
+    t = np.unique(np.stack([s, p, o], axis=1), axis=0)
+    return RDFGraph(t[:, 0], t[:, 1], t[:, 2], n_verts, n_props)
+
+
+def skewed_graph(seed: int, n_verts: int = N_VERTS, n_props: int = N_PROPS,
+                 n_edges: int = N_EDGES, alpha: float = 1.5) -> RDFGraph:
+    """Zipf-ish property skew: a few hot properties own most edges --
+    the regime the replication pass targets."""
+    rng = np.random.default_rng(seed)
+    w = 1.0 / np.arange(1, n_props + 1, dtype=np.float64) ** alpha
+    s = rng.integers(0, n_verts, n_edges)
+    p = rng.choice(n_props, size=n_edges, p=w / w.sum())
+    o = rng.integers(0, n_verts, n_edges)
+    t = np.unique(np.stack([s, p, o], axis=1), axis=0)
+    return RDFGraph(t[:, 0], t[:, 1], t[:, 2], n_verts, n_props)
+
+
+def star_query(rng: np.random.Generator, k: int,
+               n_props: int = N_PROPS) -> QueryGraph:
+    return QueryGraph.make(
+        [(-1, -(i + 2), int(rng.integers(0, n_props))) for i in range(k)])
+
+
+def chain_query(rng: np.random.Generator, k: int,
+                n_props: int = N_PROPS) -> QueryGraph:
+    return QueryGraph.make(
+        [(-(i + 1), -(i + 2), int(rng.integers(0, n_props)))
+         for i in range(k)])
+
+
+def cycle_query(rng: np.random.Generator, k: int,
+                n_props: int = N_PROPS) -> QueryGraph:
+    edges = [(-(i + 1), -(i + 2), int(rng.integers(0, n_props)))
+             for i in range(k - 1)]
+    edges.append((-k, -1, int(rng.integers(0, n_props))))
+    return QueryGraph.make(edges)
+
+
+SHAPE_MAKERS = {"star": star_query, "chain": chain_query,
+                "cycle": cycle_query}
+
+
+def with_constant(graph: RDFGraph, q: QueryGraph) -> QueryGraph:
+    """Bind one variable of ``q`` to a matching vertex (the constant
+    re-application path on the SPMD side), keeping the query non-empty
+    when possible."""
+    res = match_pattern(graph, q)
+    if res.num_rows == 0:
+        return q
+    var = sorted(res.columns)[0]
+    const = int(res.columns[var][0])
+    return QueryGraph.make(
+        [(const if e.src == var else e.src,
+          const if e.dst == var else e.dst, e.prop) for e in q.edges])
+
+
+def shape_workload(graph: RDFGraph, seed: int = SEED,
+                   n_props: Optional[int] = None,
+                   sizes: Tuple[int, ...] = (2, 3),
+                   add_constants: bool = True) -> List[QueryGraph]:
+    """The exactness harness's workload: star/chain shapes at each size
+    in ``sizes``, one 3-cycle, optionally each re-issued with one
+    variable bound to a matching constant."""
+    rng = np.random.default_rng(seed)
+    np_ = n_props if n_props is not None else graph.num_properties
+    queries: List[QueryGraph] = []
+    for k in sizes:
+        queries.append(star_query(rng, k, np_))
+        queries.append(chain_query(rng, k, np_))
+    queries.append(cycle_query(rng, 3, np_))
+    if add_constants:
+        queries += [with_constant(graph, q) for q in list(queries)]
+    return queries
+
+
+def answer_set(result) -> Tuple[List[int], set]:
+    """(sorted variables, set of full binding tuples) of a
+    ``QueryResult`` / ``MatchResult``-like object with ``bindings`` --
+    the equality the differential harnesses compare on."""
+    bindings = getattr(result, "bindings", None)
+    if bindings is None:
+        bindings = result.columns
+    vars_ = sorted(bindings)
+    n = result.num_rows
+    return vars_, {tuple(int(bindings[v][i]) for v in vars_)
+                   for i in range(n)}

@@ -5,7 +5,8 @@ import pytest
 
 from repro.core import (PartitionConfig, QueryGraph, WorkloadPartitioner,
                         generate_drifting_workload, generate_watdiv)
-from repro.core.allocation import Allocation, fragment_affinity
+from repro.core.allocation import (Allocation, fragment_affinity,
+                                   plan_replication)
 from repro.online import (AdaptiveConfig, AdaptiveEngine, DriftDetector,
                           WorkloadMonitor, migration_work_items,
                           plan_migration, refragment)
@@ -172,6 +173,114 @@ def test_migration_unbounded_budget_realizes_desired(refrag_setup):
     items = migration_work_items(plan)
     assert len(items) == len(plan.applied)
     assert all(it.est_cost >= 0.0 for it in items)
+
+
+def test_migration_replica_diffs_counted_against_budget(refrag_setup):
+    """Replica shipments compete for the same migration byte budget as
+    relocations: realized replications' bytes are part of moved_bytes,
+    never exceed what remains after the mandatory moves, and replicas
+    that do not fit are deferred (dropped, not stranded)."""
+    g, cfg, pp, res = refrag_setup
+    aff = fragment_affinity(res.frag, res.sel_usage, res.weights)
+    n = len(res.frag.fragments)
+    heat = np.arange(g.num_properties, dtype=np.float64) + 1.0
+    desired = plan_replication(g, cfg.num_sites, 10 ** 12, heat)
+    assert desired.props, "every property has heat and edges here"
+    mandatory_bytes = plan_migration(pp.frag, pp.alloc, res.frag,
+                                     res.desired_alloc, aff, 0).moved_bytes
+    cheapest = min(desired.cost_bytes[p] for p in desired.props)
+    for extra in (0, cheapest, 10 ** 12):
+        budget = mandatory_bytes + extra
+        plan = plan_migration(pp.frag, pp.alloc, res.frag,
+                              res.desired_alloc, aff, budget,
+                              old_replicated=set(),
+                              desired_replication=desired)
+        assert plan.strands_none(n, cfg.num_sites)
+        realized = plan.replicated_props
+        assert realized <= desired.prop_set
+        assert set(plan.deferred_replications) == desired.prop_set - realized
+        assert plan.replica_bytes == sum(desired.cost_bytes[p]
+                                         for p in realized)
+        # replica bytes ride inside the budget (on top of mandatory)
+        assert mandatory_bytes + plan.replica_bytes <= max(budget,
+                                                           mandatory_bytes)
+        assert plan.moved_bytes <= max(budget, mandatory_bytes)
+    # unbounded: the whole desired set is realized, one shipment per
+    # receiving site beyond the canonical copy
+    full = plan_migration(pp.frag, pp.alloc, res.frag, res.desired_alloc,
+                          aff, 10 ** 12, old_replicated=set(),
+                          desired_replication=desired)
+    assert full.replicated_props == desired.prop_set
+    assert len(full.replica_ships) == len(desired.props) * (cfg.num_sites - 1)
+
+
+def test_migration_zero_budget_with_replication_never_strands(refrag_setup):
+    """A zero-budget epoch with a pending replication diff: mandatory
+    materializations still run (nothing strands), carried replicas are
+    free, every new replication is deferred and no replica byte ships."""
+    g, cfg, pp, res = refrag_setup
+    aff = fragment_affinity(res.frag, res.sel_usage, res.weights)
+    n = len(res.frag.fragments)
+    heat = np.ones(g.num_properties, dtype=np.float64)
+    desired = plan_replication(g, cfg.num_sites, 10 ** 12, heat)
+    old_rep = set(desired.props[:2]) | {g.num_properties + 5}  # stale extra
+    plan = plan_migration(pp.frag, pp.alloc, res.frag, res.desired_alloc,
+                          aff, budget_bytes=0, old_replicated=old_rep,
+                          desired_replication=desired)
+    assert plan.strands_none(n, cfg.num_sites)
+    assert all(m.mandatory for m in plan.applied)
+    assert plan.replica_bytes == 0
+    assert plan.replica_ships == []
+    # carried copies stay, the stale extra is dropped, new ones deferred
+    assert plan.replicated_props == old_rep & desired.prop_set
+    assert set(plan.deferred_replications) == desired.prop_set - old_rep
+
+
+def test_replica_ships_ride_the_work_queue(refrag_setup):
+    """Replica shipments become work items next to fragment moves, with
+    collision-free ids, and the makespan model schedules them."""
+    from repro.online import schedule_migration
+    g, cfg, pp, res = refrag_setup
+    aff = fragment_affinity(res.frag, res.sel_usage, res.weights)
+    heat = np.ones(g.num_properties, dtype=np.float64)
+    desired = plan_replication(g, cfg.num_sites, 10 ** 12, heat)
+    plan = plan_migration(pp.frag, pp.alloc, res.frag, res.desired_alloc,
+                          aff, 10 ** 12, old_replicated=set(),
+                          desired_replication=desired)
+    assert plan.replica_ships
+    # per-site shipment bytes sum exactly to the budgeted replica cost
+    assert sum(mv.nbytes for mv in plan.replica_ships) == plan.replica_bytes
+    items = migration_work_items(plan)
+    assert len(items) == len(plan.applied) + len(plan.replica_ships)
+    ids = [it.item_id for it in items]
+    assert len(set(ids)) == len(ids)
+    assert schedule_migration(plan, cfg.num_sites) > 0.0
+
+
+def test_adaptive_engine_recomputes_replication_on_repartition(watdiv_small):
+    """With a replication budget in the config, a drift-triggered
+    re-partition re-ranks the replicated set on the live heat and ships
+    the diff within the migration budget."""
+    g = watdiv_small
+    wl = generate_drifting_workload(g, [(400, {})], seed=11)
+    budget = 2_000_000
+    pp = WorkloadPartitioner(g, wl, PartitionConfig(
+        kind="vertical", num_sites=4,
+        replication_budget_bytes=600_000)).run()
+    assert pp.plan.replicated_props          # offline pass replicated
+    eng = AdaptiveEngine(pp, AdaptiveConfig(
+        epoch_len=100, migration_budget_bytes=budget))
+    assert eng.replicated_props == pp.plan.replicated_props
+    stream = generate_drifting_workload(
+        g, [(100, {}), (400, {"S": 12.0})], seed=23)
+    for q in stream.queries:
+        eng.execute(q)
+    assert eng.num_repartitions >= 1
+    per_epoch = [ep.moved_bytes for ep in eng.epochs]
+    assert max(per_epoch) <= budget
+    st = eng.stats()
+    assert st.extra["replicated_props"] == len(eng.replicated_props)
+    assert st.extra["replica_bytes"] == eng.total_replica_bytes
 
 
 def test_refragment_warm_start_keeps_incumbents(refrag_setup):

@@ -235,6 +235,66 @@ def test_warp_plan_roundtrip(tmp_path, tiny):
         match_pattern(g, q).num_rows
 
 
+def test_replicated_plan_roundtrip(tmp_path, tiny):
+    """The replication metadata (set + config knob) survives save/load,
+    and the loaded plan serves SPMD queries with the replicated
+    properties shard-complete."""
+    g, wl = tiny
+    plan = build_plan(g, wl, PartitionConfig(
+        kind="vertical", num_sites=4, replication_budget_bytes=300_000))
+    assert plan.replicated_props
+    loaded = PartitionPlan.load(plan.save(tmp_path / "plan_rep"), g)
+    assert loaded == plan
+    assert loaded.replicated_props == plan.replicated_props
+    assert loaded.config.replication_budget_bytes == 300_000
+    # the pass's provenance (ranking, costs, spend) round-trips too
+    assert loaded.replication is not None
+    assert loaded.replication.props == plan.replication.props
+    assert loaded.replication.heat == plan.replication.heat
+    assert loaded.replication.cost_bytes == plan.replication.cost_bytes
+    assert loaded.replication.spent_bytes == plan.replication.spent_bytes
+    sess = Session(loaded, backend="spmd", spmd_capacity=SPMD_CAPACITY)
+    q = wl.queries[0]
+    assert sess.execute(q).num_rows == match_pattern(g, q).num_rows
+    assert sess.stats().extra["replicated_props"] == \
+        len(plan.replicated_props)
+    for prop in plan.replicated_props:
+        assert sess.engine.store.prop_shard_complete(prop)
+
+
+def test_unreplicated_plans_differ_from_replicated(tiny):
+    """Plan equality must see the replication set (two plans differing
+    only there are different artifacts)."""
+    import dataclasses
+    g, wl = tiny
+    plan = build_plan(g, wl, PartitionConfig(
+        kind="vertical", num_sites=4, replication_budget_bytes=300_000))
+    stripped = dataclasses.replace(plan, replicated_props=set())
+    assert stripped != plan
+
+
+def test_pr4_era_plan_loads_with_empty_replication(tmp_path, tiny, vplan,
+                                                   sample):
+    """Backward compat: a plan saved before the replication pass has no
+    ``replicated_props`` array and no ``replication_budget_bytes``
+    config key -- loading must default both to 'no replication'."""
+    import json
+    g, _ = tiny
+    qs, want = sample
+    path = vplan.save(tmp_path / "plan_pr4")
+    meta = json.loads((path / "plan.json").read_text())
+    del meta["arrays"]["replicated_props"]        # PR-4 never wrote it
+    meta.pop("replication", None)
+    del meta["config"]["replication_budget_bytes"]
+    (path / "plan.json").write_text(json.dumps(meta, indent=1))
+    loaded = PartitionPlan.load(path, g)
+    assert loaded.replicated_props == set()
+    assert loaded.config.replication_budget_bytes == 0
+    assert loaded == vplan
+    got = [r.num_rows for r in Session(loaded).execute_many(qs)]
+    assert got == want
+
+
 def test_plan_load_rejects_wrong_graph(tmp_path, tiny, vplan):
     other = generate_watdiv(1_000, seed=99)
     path = vplan.save(tmp_path / "plan_sig")

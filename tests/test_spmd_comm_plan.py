@@ -147,7 +147,9 @@ def test_smaller_side_bindings_win_on_tiny_binding_table(skew_graph):
 def test_shard_complete_property_skips_every_gather(skew_graph):
     """Every join step on a property replicated across all devices:
     zero gathers, zero edge ships, comm only from the final result
-    gather."""
+    gather -- and with step 0's property also complete, the seeds are
+    decimated across the mesh, so the final gather ships the answer
+    exactly once (not one duplicate per device)."""
     g = skew_graph
     rep = np.nonzero(np.asarray(g.p) != 0)[0]      # props 1 and 2 everywhere
     rest = np.nonzero(np.asarray(g.p) == 0)[0]
@@ -161,11 +163,19 @@ def test_shard_complete_property_skips_every_gather(skew_graph):
     assert extra["skipped_gathers"] == 1
     assert extra["gather_steps"] == 0
     assert extra["edge_shipped_steps"] == 0
-    # ledger: only the final full-width gather remains.  With the
-    # query's properties complete on every device, each device computes
-    # (and ships) the full answer set itself.
+    assert extra["decimated_seed_queries"] == 1
+    # ledger: only the final full-width gather remains, at exactly one
+    # copy of the answer set (seed decimation partitioned the work)
     m = len(jax.devices())
-    assert eng.stats().comm_bytes == (m - 1) * (m * want) * (3 * 4 + 1)
+    assert eng.stats().comm_bytes == (m - 1) * want * (3 * 4 + 1)
+    # planner off = the faithful naive baseline: no decimation, every
+    # step gathers, every device computes (and ships) the full answer
+    naive = SpmdEngine(g, sites, capacity=4096, comm_plan=False)
+    assert naive.execute(q).num_rows == want
+    nextra = naive.stats().extra
+    assert nextra["decimated_seed_queries"] == 0
+    assert nextra["skipped_gathers"] == 0
+    assert naive.stats().comm_bytes > eng.stats().comm_bytes
 
 
 @needs_mesh
@@ -211,6 +221,110 @@ def test_planned_ledger_never_exceeds_naive(skew_graph):
         assert bytes_by_mode[True] <= bytes_by_mode[False], name
     if MULTI:
         assert any(v[True] < v[False] for v in per_shape.values()), per_shape
+
+
+# ----------------------------------------------------------------------
+# Allocation-aware replication: planner, seed decimation, edge cache
+# ----------------------------------------------------------------------
+
+def _heat_graph() -> RDFGraph:
+    """prop 0: 100 edges, prop 1: 10, prop 2: 50 -- known replica costs
+    for the greedy-knapsack assertions."""
+    triples = [(i, 0, 200 + i) for i in range(100)]
+    triples += [(i, 1, 320 + i) for i in range(10)]
+    triples += [(i, 2, 340 + i) for i in range(50)]
+    return _graph(triples, 400, 3)
+
+
+def test_plan_replication_ranks_heat_per_byte():
+    from repro.core import plan_replication
+    g = _heat_graph()
+    sites = 4
+    heat = np.array([10.0, 9.0, 1.0])
+    # replica cost = rows * 12 * (sites - 1): 3600 / 360 / 1800 bytes;
+    # heat per byte ranks prop 1 >> prop 0 > prop 2
+    rp = plan_replication(g, sites, 10 ** 9, heat)
+    assert rp.props == [1, 0, 2]
+    assert rp.cost_bytes == {0: 3600, 1: 360, 2: 1800}
+    assert rp.spent_bytes == 5760
+    # budget for prop 1 only
+    assert plan_replication(g, sites, 360, heat).props == [1]
+    # a candidate that does not fit is skipped, not a stopping point:
+    # prop 0 (rank 2) busts this budget but prop 2 (rank 3) still fits
+    rp = plan_replication(g, sites, 360 + 1800, heat)
+    assert rp.props == [1, 2]
+    assert rp.within_budget()
+
+
+def test_plan_replication_zero_budget_and_zero_heat():
+    from repro.core import plan_replication
+    g = _heat_graph()
+    assert plan_replication(g, 4, 0, np.ones(3)).props == []
+    # one site: replication is meaningless, nothing is chosen
+    assert plan_replication(g, 1, 10 ** 9, np.ones(3)).props == []
+    # heat-zero properties are never candidates, whatever the budget
+    rp = plan_replication(g, 4, 10 ** 9, np.array([0.0, 5.0, 0.0]))
+    assert rp.props == [1]
+    assert set(rp.heat) == {1}
+
+
+def test_replicated_plan_makes_hot_props_shard_complete():
+    """End to end through build_plan: the replicated plan's SPMD store
+    reports the chosen properties shard-complete and the engine carries
+    the provenance counter."""
+    from repro.core import PartitionConfig, Workload, build_plan
+    g = _heat_graph()
+    qs = [QueryGraph.make([(-1, -2, 0), (-1, -3, 1)]),
+          QueryGraph.make([(-1, -2, 1)])]
+    plan = build_plan(g, Workload(qs), PartitionConfig(
+        kind="shape", num_sites=4, replication_budget_bytes=400))
+    assert plan.replicated_props == {1}          # hottest per byte
+    eng = plan.build_spmd_engine(capacity=1024)
+    assert eng.store.prop_shard_complete(1)
+    assert eng.replicated_props == {1}
+    assert eng.stats().extra["replicated_props"] == 1.0
+    # the uniform storage view reaches the baseline backend too: every
+    # site of the gather-all engine holds every prop-1 edge
+    beng = plan.build_baseline_engine()
+    rep_ids = set(np.nonzero(np.asarray(g.p) == 1)[0].tolist())
+    for site_edges in beng.frag.site_edges:
+        assert rep_ids <= set(np.asarray(site_edges).tolist())
+
+
+@needs_mesh
+def test_seed_decimation_partitions_replicated_seeds(skew_graph):
+    """Step 0 on a fully replicated property: without decimation every
+    device would duplicate every seed (m-fold final gather).  With it
+    the ledger's final gather ships each answer exactly once."""
+    g = skew_graph
+    rep = np.nonzero(np.asarray(g.p) == 2)[0]       # prop 2 everywhere
+    rest = np.nonzero(np.asarray(g.p) != 2)[0]
+    sites = [np.unique(np.concatenate([rep, rest[i::4]])) for i in range(4)]
+    q = QueryGraph.make([(-1, -2, 2), (-1, -3, 0)])  # seed on replicated 2
+    want_vars = match_pattern(g, q)
+    eng = SpmdEngine(g, sites, capacity=1 << 15)
+    r = eng.execute(q)
+    assert r.num_rows == want_vars.num_rows
+    extra = eng.stats().extra
+    assert extra["decimated_seed_queries"] == 1
+    assert extra["capacity_retries"] == 0
+
+
+@needs_mesh
+def test_edge_cache_reuses_gather_across_steps(skew_graph):
+    """Two join steps on the same (non-complete) property inside one
+    query: the first ships the property's edge rows, the second reuses
+    the gathered table from the trace cache -- one ship, one hit,
+    exact answers."""
+    g = skew_graph
+    q = QueryGraph.make([(-1, -2, 0), (-1, -3, 2), (-1, -4, 2)])
+    want = match_pattern(g, q).num_rows
+    eng = SpmdEngine(g, _round_robin_sites(g), capacity=1 << 16)
+    assert eng.execute(q).num_rows == want
+    extra = eng.stats().extra
+    assert extra["edge_shipped_steps"] == 1
+    assert extra["edge_cache_hits"] == 1
+    assert extra["capacity_retries"] == 0
 
 
 def test_single_device_mesh_ships_nothing():

@@ -15,83 +15,23 @@ import warnings
 import numpy as np
 import pytest
 
+from generators import (SEED, answer_set as _answer_set,
+                        chain_query as _chain, random_graph,
+                        shape_workload)
 from repro.core import PartitionConfig, STRATEGIES, Session, build_plan
-from repro.core.graph import RDFGraph
 from repro.core.matching import match_pattern
 from repro.core.query import QueryGraph
 from repro.core.workload import Workload
 
-N_VERTS, N_PROPS, N_EDGES = 150, 6, 400
-SEED = 1234
-
-
-def _random_graph(seed: int = SEED) -> RDFGraph:
-    rng = np.random.default_rng(seed)
-    s = rng.integers(0, N_VERTS, N_EDGES)
-    p = rng.integers(0, N_PROPS, N_EDGES)
-    o = rng.integers(0, N_VERTS, N_EDGES)
-    t = np.unique(np.stack([s, p, o], axis=1), axis=0)
-    return RDFGraph(t[:, 0], t[:, 1], t[:, 2], N_VERTS, N_PROPS)
-
-
-def _star(rng, k: int) -> QueryGraph:
-    return QueryGraph.make(
-        [(-1, -(i + 2), int(rng.integers(0, N_PROPS))) for i in range(k)])
-
-
-def _chain(rng, k: int) -> QueryGraph:
-    return QueryGraph.make(
-        [(-(i + 1), -(i + 2), int(rng.integers(0, N_PROPS)))
-         for i in range(k)])
-
-
-def _cycle(rng, k: int) -> QueryGraph:
-    edges = [(-(i + 1), -(i + 2), int(rng.integers(0, N_PROPS)))
-             for i in range(k - 1)]
-    edges.append((-k, -1, int(rng.integers(0, N_PROPS))))
-    return QueryGraph.make(edges)
-
-
-def _with_constant(graph: RDFGraph, q: QueryGraph) -> QueryGraph:
-    """Bind one variable of ``q`` to a matching vertex (the constant
-    re-application path on the SPMD side), keeping the query non-empty
-    when possible."""
-    res = match_pattern(graph, q)
-    if res.num_rows == 0:
-        return q
-    var = sorted(res.columns)[0]
-    const = int(res.columns[var][0])
-    return QueryGraph.make(
-        [(const if e.src == var else e.src,
-          const if e.dst == var else e.dst, e.prop) for e in q.edges])
-
-
-def _workload(graph: RDFGraph, seed: int = SEED):
-    rng = np.random.default_rng(seed)
-    queries = []
-    for k in (2, 3):
-        queries.append(_star(rng, k))
-        queries.append(_chain(rng, k))
-    queries.append(_cycle(rng, 3))
-    queries += [_with_constant(graph, q) for q in list(queries)]
-    return queries
-
-
-def _answer_set(result):
-    vars_ = sorted(result.bindings)
-    n = result.num_rows
-    return vars_, {tuple(int(result.bindings[v][i]) for v in vars_)
-                   for i in range(n)}
-
 
 @pytest.fixture(scope="module")
 def rgraph():
-    return _random_graph()
+    return random_graph(SEED)
 
 
 @pytest.fixture(scope="module")
 def rqueries(rgraph):
-    return _workload(rgraph)
+    return shape_workload(rgraph, SEED, n_props=rgraph.num_properties)
 
 
 # ----------------------------------------------------------------------
