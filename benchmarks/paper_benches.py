@@ -319,8 +319,64 @@ def bench_spmd_replication() -> None:
                    for v in per_shape.values())))
 
 
+# ----------------------------------------------------------------------
+# Telemetry-layer latency bench: per-backend, per-shape wall-clock
+# latency through the obs histograms (p50/p99 derived from the same
+# fixed-bucket counts a metrics snapshot exports), plus queries/sec.
+# The SPMD backend runs under an explicit enabled tracer and the bench
+# closes with a trace/ledger reconciliation row: the sum of per-step
+# traced bytes over every root span must equal the engine's cumulative
+# ``comm_bytes`` ledger exactly (`trace_ledger_delta_bytes` == 0).
+# ----------------------------------------------------------------------
+
+def bench_latency() -> None:
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.trace import Tracer
+
+    g, wl = _setup(n_triples=8_000, n_queries=500, seed=5)
+    plan = build_plan(g, wl, PartitionConfig(kind="vertical", num_sites=4))
+    registry = MetricsRegistry()
+    tracer = Tracer(enabled=True, capacity=4096)
+    shapes = _shape_workload(g)
+    for backend in BACKENDS:
+        sess = Session(plan, backend=backend, tracer=tracer,
+                       metrics_registry=registry)
+        n_total = 0
+        wall_total = 0.0
+        for shape, qs in shapes.items():
+            h = registry.histogram("repro_bench_latency_seconds",
+                                   backend=backend, shape=shape)
+            # one warm-up query so the SPMD numbers measure steady-state
+            # serving, not jit compilation (harmless no-op elsewhere)
+            sess.execute(qs[0])
+            t0 = time.perf_counter()
+            for q in qs:
+                q0 = time.perf_counter()
+                sess.execute(q)
+                h.observe(time.perf_counter() - q0)
+            dt = time.perf_counter() - t0
+            n_total += len(qs)
+            wall_total += dt
+            emit("bench_latency", f"{backend}_{shape}", "p50_ms",
+                 h.percentile(0.50) * 1e3)
+            emit("bench_latency", f"{backend}_{shape}", "p99_ms",
+                 h.percentile(0.99) * 1e3)
+            emit("bench_latency", f"{backend}_{shape}", "qps",
+                 len(qs) / max(dt, 1e-12))
+        emit("bench_latency", backend, "qps",
+             n_total / max(wall_total, 1e-12))
+        if backend == "spmd":
+            spans = [s for s in tracer.store.spans()
+                     if s.attrs.get("backend") == "spmd"]
+            traced = sum(rec.get("bytes", 0)
+                         for s in spans for rec in s.records)
+            ledger = sess.stats().comm_bytes
+            emit("bench_latency", "spmd", "trace_ledger_delta_bytes",
+                 float(abs(traced - ledger)))
+
+
 ALL = [bench_minsup, bench_throughput, bench_response, bench_scalability,
        bench_redundancy, bench_offline, bench_queries, bench_engine_parity,
-       bench_spmd_comm, bench_spmd_replication]
+       bench_spmd_comm, bench_spmd_replication, bench_latency]
 
-SMOKE = [bench_engine_parity]
+SMOKE = [bench_engine_parity, bench_latency]

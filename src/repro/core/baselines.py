@@ -170,6 +170,8 @@ class BaselineEngine(EngineBase):
     ``frag.name`` falls back to edge-at-a-time units -- exact over any
     covering site assignment."""
 
+    trace_name = "baseline"
+
     def __init__(self, graph: RDFGraph, frag: BaselineFragmentation,
                  local_patterns: Optional[Sequence[QueryGraph]] = None,
                  cost: Optional[CostModel] = None):
@@ -197,27 +199,31 @@ class BaselineEngine(EngineBase):
             return _star_decomposition(query)
         return [[i] for i in range(query.num_edges)]
 
-    def execute(self, query: QueryGraph) -> QueryResult:
+    def _execute(self, query: QueryGraph) -> QueryResult:
         cm = self.cost
+        tr = self.tracer
         units = self._units(query)
         busy: Dict[int, float] = {}
         comm_bytes = 0
         n_msgs = 0
 
         unit_results: List[Dict[int, np.ndarray]] = []
-        for grp in units:
+        for ui, grp in enumerate(units):
             sq = QueryGraph(tuple(query.edges[i] for i in sorted(grp)))
             merged: Optional[Dict[int, np.ndarray]] = None
-            for site in range(self.num_sites):
-                g, idx = self._site_graphs[site], self._site_index[site]
-                res = match_pattern(g, sq, index=idx)
-                busy[site] = busy.get(site, 0.0) + (
-                    g.num_edges * cm.sec_per_edge_scan +
-                    res.num_rows * cm.sec_per_result_row)
-                cols = dict(res.columns)
-                merged = cols if merged is None else {
-                    v: np.concatenate([merged[v], cols[v]]) for v in merged}
-            merged = _dedup_rows(merged or {})
+            with tr.span("unit_match", unit=ui, edges=len(grp)) as sp:
+                for site in range(self.num_sites):
+                    g, idx = self._site_graphs[site], self._site_index[site]
+                    res = match_pattern(g, sq, index=idx)
+                    busy[site] = busy.get(site, 0.0) + (
+                        g.num_edges * cm.sec_per_edge_scan +
+                        res.num_rows * cm.sec_per_result_row)
+                    cols = dict(res.columns)
+                    merged = cols if merged is None else {
+                        v: np.concatenate([merged[v], cols[v]])
+                        for v in merged}
+                merged = _dedup_rows(merged or {})
+                sp.set("rows", _nrows(merged))
             unit_results.append(merged)
 
         # order by ascending cardinality, join left-deep

@@ -28,10 +28,16 @@ and funnel every finished query through ``_finish(query, result)``.
 from __future__ import annotations
 
 import dataclasses
-from typing import (TYPE_CHECKING, Any, Callable, Dict, List, Protocol,
-                    Sequence, runtime_checkable)
+import warnings
+from typing import (TYPE_CHECKING, Any, Callable, Dict, List, Optional,
+                    Protocol, Sequence, runtime_checkable)
+
+from ..obs import metrics as _obs_metrics
+from ..obs import trace as _obs_trace
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
+    from ..obs.metrics import MetricsRegistry
+    from ..obs.trace import Tracer
     from .executor import QueryResult
     from .query import QueryGraph
 
@@ -87,7 +93,20 @@ class Engine(Protocol):
 
 
 class EngineBase:
-    """Shared counter/hook plumbing + batched ``execute_many``."""
+    """Shared counter/hook/telemetry plumbing + batched
+    ``execute_many``.
+
+    Concrete engines implement ``_execute`` (the former ``execute``
+    body) and inherit the public ``execute``, which wraps each query in
+    a root telemetry span when tracing is on.  ``_init_engine_base``
+    binds the process-default tracer and metrics registry
+    (``repro.obs``); both are swappable afterwards via ``set_tracer`` /
+    ``set_metrics_registry`` (``Session`` exposes them as constructor
+    knobs).
+    """
+
+    #: short backend label stamped on spans and metric series
+    trace_name: str = "engine"
 
     def _init_engine_base(self) -> None:
         self.post_execute_hooks: List[Callable[[Any, Any], None]] = []
@@ -96,23 +115,105 @@ class EngineBase:
         self._n_comm_bytes = 0
         self._t_response = 0.0
         self._counters: Dict[str, float] = {}
+        self.tracer: "Tracer" = _obs_trace.get_tracer()
+        self.metrics: "MetricsRegistry" = _obs_metrics.get_registry()
+        self._metric_cache: Dict[str, Any] = {}
+        self._hook_warned = False
+        self._bump("hook_errors", 0)
+
+    # -- telemetry wiring ----------------------------------------------
+    def set_tracer(self, tracer: "Tracer") -> None:
+        """Route this engine's spans through ``tracer`` (wrapping
+        engines override to propagate to their inner engine)."""
+        self.tracer = tracer
+
+    def set_metrics_registry(self, registry: "MetricsRegistry") -> None:
+        """Route this engine's metrics into ``registry``.  Counters
+        pre-registered at construction are re-registered so the new
+        registry exposes them immediately."""
+        self.metrics = registry
+        self._metric_cache = {}
+        for name in self._counters:
+            registry.counter(f"repro_{name}_total",
+                             backend=self.trace_name)
+
+    def _metric(self, kind: str, name: str, **kw):
+        """Per-engine cache over registry lookups (one dict hit on the
+        hot path instead of a labels sort)."""
+        m = self._metric_cache.get(name)
+        if m is None:
+            factory = getattr(self.metrics, kind)
+            m = factory(name, backend=self.trace_name, **kw)
+            self._metric_cache[name] = m
+        return m
 
     def _bump(self, name: str, amount: float = 1.0) -> None:
         """Accumulate a named backend counter; all counters surface in
-        ``stats().extra``.  Bump with ``amount=0`` at construction to
+        ``stats().extra`` and as ``repro_<name>_total`` counters in the
+        metrics registry.  Bump with ``amount=0`` at construction to
         pre-register a counter so it is present even before it fires."""
         self._counters[name] = self._counters.get(name, 0.0) + amount
+        self._metric("counter", f"repro_{name}_total").inc(amount)
+
+    # ------------------------------------------------------------------
+    def execute(self, query: "QueryGraph") -> "QueryResult":
+        """Answer one query exactly (the backend's ``_execute``),
+        wrapped in a root telemetry span when tracing is enabled.  See
+        the backend's ``_execute`` docstring for execution semantics."""
+        tracer = self.tracer
+        if not tracer.enabled:
+            return self._execute(query)
+        with tracer.span("query", backend=self.trace_name):
+            return self._execute(query)
+
+    def _execute(self, query: "QueryGraph") -> "QueryResult":
+        raise NotImplementedError
 
     # ------------------------------------------------------------------
     def _finish(self, query: "QueryGraph", result: "QueryResult"
                 ) -> "QueryResult":
-        """Record counters and run observers; every execute() ends here."""
+        """Record counters/metrics, annotate the query span, and run
+        observers; every ``_execute`` ends here.  A raising observer is
+        counted (``hook_errors``) and warned about once, never allowed
+        to abort the query: the result is already computed, and one bad
+        hook must not take down the serving path."""
         self._n_queries += 1
         self._n_rows += result.num_rows
         self._n_comm_bytes += result.stats.comm_bytes
         self._t_response += result.stats.response_time
+        st = result.stats
+        self._metric("counter", "repro_queries_total").inc()
+        self._metric("counter", "repro_result_rows_total").inc(
+            result.num_rows)
+        self._metric("counter", "repro_comm_bytes_total").inc(st.comm_bytes)
+        self._metric("counter",
+                     "repro_response_time_seconds_total").inc(
+            st.response_time)
+        self._metric("histogram", "repro_query_latency_seconds").observe(
+            st.response_time)
+        for name, val in self._stats_extra().items():
+            g = self._metric_cache.get(f"_g_{name}")
+            if g is None:
+                g = self.metrics.gauge(f"repro_{name}",
+                                       backend=self.trace_name)
+                self._metric_cache[f"_g_{name}"] = g
+            g.set(val)
+        if self.tracer.enabled:
+            self.tracer.annotate(rows=result.num_rows,
+                                 comm_bytes=st.comm_bytes,
+                                 response_time=st.response_time)
         for hook in self.post_execute_hooks:
-            hook(query, result)
+            try:
+                hook(query, result)
+            except Exception as exc:  # noqa: BLE001 -- observer isolation
+                self._bump("hook_errors")
+                if not self._hook_warned:
+                    self._hook_warned = True
+                    warnings.warn(
+                        f"post_execute_hook {hook!r} raised "
+                        f"{type(exc).__name__}: {exc}; counting as "
+                        f"hook_errors and continuing (warning once per "
+                        f"engine)", RuntimeWarning, stacklevel=2)
         return result
 
     # ------------------------------------------------------------------
@@ -136,54 +237,11 @@ class EngineBase:
         """Cumulative counters since construction.
 
         ``extra`` merges the named counters bumped through ``_bump``
-        with the backend's ``_stats_extra``.  Keys by backend (the
-        single catalogue -- backends document behaviour, this documents
-        the counters):
-
-        SPMD (``SpmdEngine``):
-            ``capacity_retries``    -- re-executions at a doubled
-            binding-table capacity tier after an overflow;
-            ``overflow_events``     -- attempts whose binding table
-            overflowed on some device;
-            ``compiled_shapes``     -- distinct (pattern shape x
-            capacity tier) programs jitted;
-            ``devices``             -- mesh devices the logical sites
-            folded onto;
-            ``comm_planner``        -- 1.0 when size-aware
-            communication planning is on;
-            ``gather_steps``        -- join steps that shipped the
-            binding tables (all_gather + dedup);
-            ``edge_shipped_steps``  -- join steps that shipped the
-            property's edge rows instead (bindings outweighed them);
-            ``skipped_gathers``     -- join steps that shipped nothing
-            (property shard-complete on every device);
-            ``replication_skipped_steps`` -- the subset of
-            ``skipped_gathers`` whose property is in the plan's
-            replication set (attribution by membership: a property the
-            pass chose may also have been complete from fragment
-            overlap already);
-            ``edge_cache_hits``     -- join steps that reused an earlier
-            step's gathered edge table of the same property (zero wire
-            bytes; counted in ``comm_bytes_saved``);
-            ``decimated_seed_queries`` -- queries whose step-0 property
-            was shard-complete, so the seed rows were striped across
-            the mesh (replicated storage served as partitioned work);
-            ``replicated_props``    -- properties the plan replicated
-            to every site;
-            ``comm_bytes_saved``    -- ledger bytes avoided by the
-            planner's edge-ship / cache-reuse decisions vs. always
-            gathering.
-            The step counters (like ``comm_bytes``) account
-            *inter-device* shipping only: on a 1-device mesh no join
-            step has peers to ship to or skip, so all stay 0.
-
-        Adaptive (``AdaptiveEngine``):
-            ``epochs`` -- closed epochs; ``repartitions`` -- re-mine +
-            migrate cycles fired; ``moved_bytes`` -- fragment + replica
-            bytes migrated in total; ``replicated_props`` -- properties
-            currently replicated to every site (re-ranked on the live
-            heat at each re-partition); ``replica_bytes`` -- the subset
-            of ``moved_bytes`` spent shipping replica diffs.
+        with the backend's derived ``_stats_extra`` gauges.  The single
+        key catalogue (per backend, with semantics) lives in
+        ``docs/observability.md`` -- every key is also exported as a
+        named metric (``repro_<key>_total`` counters / ``repro_<key>``
+        gauges) through the ``repro.obs`` registry.
 
         Returns:
             An ``EngineStats`` snapshot (``backend``/``strategy`` are

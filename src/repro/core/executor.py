@@ -126,6 +126,8 @@ def _nrows(cols: Dict[int, np.ndarray]) -> int:
 class DistributedEngine(EngineBase):
     """Fragment-resident distributed SPARQL engine (host-exact)."""
 
+    trace_name = "local"
+
     def __init__(self, graph: RDFGraph, frag: Fragmentation,
                  alloc: Allocation, dictionary: DataDictionary,
                  cold_props: Set[int], cost: Optional[CostModel] = None):
@@ -195,8 +197,9 @@ class DistributedEngine(EngineBase):
         return out
 
     # -- query execution -------------------------------------------------
-    def execute(self, query: QueryGraph) -> QueryResult:
+    def _execute(self, query: QueryGraph) -> QueryResult:
         cm = self.cost
+        tr = self.tracer
         decomp = decompose(query, self.dict, self.cold_props)
         plan = optimize(decomp, self.dict)
 
@@ -213,26 +216,33 @@ class DistributedEngine(EngineBase):
             rel = self._relevant_fragments(sq, pid)
             merged: Optional[Dict[int, np.ndarray]] = None
             best_site, best_rows = 0, -1
-            for kind, fi, site in rel:
-                g, idx = self._fragment("hot" if kind == "hot" else "cold", fi)
-                res = match_pattern(g, sq, index=idx)
-                sites_touched.add(site)
-                busy[site] = busy.get(site, 0.0) + (
-                    g.num_edges * cm.sec_per_edge_scan +
-                    res.num_rows * cm.sec_per_result_row)
-                cols = {v: c for v, c in res.columns.items()}
-                if res.num_rows > best_rows:
-                    best_rows, best_site = res.num_rows, site
+            with tr.span("site_match", subquery=si,
+                         pattern_id=pid if pid is not None else -1,
+                         fragments=len(rel)) as sp:
+                for kind, fi, site in rel:
+                    g, idx = self._fragment(
+                        "hot" if kind == "hot" else "cold", fi)
+                    res = match_pattern(g, sq, index=idx)
+                    sites_touched.add(site)
+                    busy[site] = busy.get(site, 0.0) + (
+                        g.num_edges * cm.sec_per_edge_scan +
+                        res.num_rows * cm.sec_per_result_row)
+                    cols = {v: c for v, c in res.columns.items()}
+                    if res.num_rows > best_rows:
+                        best_rows, best_site = res.num_rows, site
+                    if merged is None:
+                        merged = cols
+                    else:
+                        merged = {v: np.concatenate([merged[v], cols[v]])
+                                  for v in merged}
                 if merged is None:
-                    merged = cols
-                else:
-                    merged = {v: np.concatenate([merged[v], cols[v]])
-                              for v in merged}
-            if merged is None:
-                merged = {v: np.zeros(0, np.int32)
-                          for v in sq.vertices() if v < 0}
-            # overlap dedup: the same match may exist in several fragments
-            merged = _dedup_rows(merged)
+                    merged = {v: np.zeros(0, np.int32)
+                              for v in sq.vertices() if v < 0}
+                # overlap dedup: the same match may exist in several
+                # fragments
+                merged = _dedup_rows(merged)
+                sp.set("rows", _nrows(merged))
+                sp.set("sites", len({s for _, _, s in rel}))
             sub_results.append(merged)
             sub_home.append(best_site)
 
@@ -245,17 +255,24 @@ class DistributedEngine(EngineBase):
             nxt = sub_results[k]
             nxt_site = sub_home[k]
             rows_acc, rows_nxt = _nrows(acc), _nrows(nxt)
-            if nxt_site != acc_site:
-                ship_cols = (len(nxt), rows_nxt) if rows_nxt <= rows_acc \
-                    else (len(acc), rows_acc)
-                if rows_nxt > rows_acc:
-                    acc_site = nxt_site
-                comm_bytes += int(ship_cols[0] * ship_cols[1] * cm.bytes_per_row_col)
-                n_msgs += 1
-            acc = join_bindings(acc, nxt)
-            join_time += (_nrows(acc) + rows_acc + rows_nxt) * cm.join_sec_per_row
-            busy[acc_site] = busy.get(acc_site, 0.0) + (
-                (_nrows(acc) + rows_acc + rows_nxt) * cm.join_sec_per_row)
+            with tr.span("join", subquery=k, site=nxt_site) as sp:
+                shipped = 0
+                if nxt_site != acc_site:
+                    ship_cols = (len(nxt), rows_nxt) if rows_nxt <= rows_acc \
+                        else (len(acc), rows_acc)
+                    if rows_nxt > rows_acc:
+                        acc_site = nxt_site
+                    shipped = int(ship_cols[0] * ship_cols[1]
+                                  * cm.bytes_per_row_col)
+                    comm_bytes += shipped
+                    n_msgs += 1
+                acc = join_bindings(acc, nxt)
+                join_time += (_nrows(acc) + rows_acc + rows_nxt) \
+                    * cm.join_sec_per_row
+                busy[acc_site] = busy.get(acc_site, 0.0) + (
+                    (_nrows(acc) + rows_acc + rows_nxt) * cm.join_sec_per_row)
+                sp.set("shipped_bytes", shipped)
+                sp.set("rows", _nrows(acc))
 
         # response time: parallel local phase (max over sites) + comm + joins
         local = max(busy.values()) if busy else 0.0

@@ -52,7 +52,10 @@ class Session:
                  mesh=None, spmd_axis: str = "sites",
                  spmd_capacity: int = 4096,
                  spmd_max_capacity: Optional[int] = None,
-                 spmd_comm_plan: bool = True):
+                 spmd_comm_plan: bool = True,
+                 trace: bool = False,
+                 tracer=None,
+                 metrics_registry=None):
         """Build the backend engine for ``plan``.
 
         Args:
@@ -70,6 +73,16 @@ class Session:
             spmd_comm_plan: size-aware per-join-step communication
                 planning (default on); ``False`` = naive gather of the
                 binding tables before every join step.
+            trace: ``True`` builds a private enabled ``Tracer`` for this
+                session (root span per query, backend-specific child
+                spans / step records; see ``docs/observability.md``).
+            tracer: explicit ``obs.trace.Tracer`` to use instead
+                (overrides ``trace``); default is the process tracer
+                (``obs.trace.get_tracer()``, disabled unless
+                ``obs.trace.enable_tracing()`` ran).
+            metrics_registry: explicit ``obs.metrics.MetricsRegistry``
+                for this session's counters/gauges/histograms; default
+                is the process registry.
 
         Raises:
             ValueError: unknown backend name, or a plan that cannot
@@ -92,6 +105,13 @@ class Session:
             # lazy import: repro.online imports repro.core, not vice versa
             from ..online.loop import AdaptiveEngine
             self.engine = AdaptiveEngine(plan, adaptive_config, cost)
+        if tracer is None and trace:
+            from ..obs.trace import Tracer
+            tracer = Tracer(enabled=True)
+        if tracer is not None:
+            self.engine.set_tracer(tracer)
+        if metrics_registry is not None:
+            self.engine.set_metrics_registry(metrics_registry)
 
     # -- Engine protocol, delegated -------------------------------------
     @property
@@ -105,6 +125,18 @@ class Session:
     def num_sites(self) -> int:
         """Logical cluster width the plan was built for."""
         return self.engine.num_sites
+
+    @property
+    def tracer(self):
+        """The ``obs.trace.Tracer`` the backend engine reports to
+        (``tracer.store.spans()`` holds the finished root spans)."""
+        return self.engine.tracer
+
+    @property
+    def metrics(self):
+        """The ``obs.metrics.MetricsRegistry`` the backend engine
+        publishes its counters/gauges/histograms into."""
+        return self.engine.metrics
 
     def execute(self, query: QueryGraph) -> QueryResult:
         """Answer one query exactly.
@@ -135,7 +167,7 @@ class Session:
         return self.engine.execute_many(queries, batch_size=batch_size)
 
     def stats(self) -> EngineStats:
-        """Cumulative counters (see ``EngineBase.stats`` for the
+        """Cumulative counters (see ``docs/observability.md`` for the
         ``extra`` key catalogue), stamped with this session's backend
         and strategy provenance."""
         s = self.engine.stats()

@@ -188,6 +188,10 @@ COMM_EDGE = 1         # shipped the step property's edge rows instead
 COMM_SKIP = 2         # shipped nothing (shard-complete property / 1 device)
 COMM_EDGE_CACHED = 3  # reused an earlier step's gathered edge table
 
+#: decision code -> the name used in trace records and docs
+COMM_DECISION_NAMES = {COMM_GATHER: "gather", COMM_EDGE: "edge_ship",
+                       COMM_SKIP: "skip", COMM_EDGE_CACHED: "edge_cached"}
+
 
 def bind_row_bytes(num_cols: int) -> int:
     """Wire bytes of one binding-table row: ``num_cols`` int32 columns
@@ -858,7 +862,22 @@ class SpmdEngine(EngineBase):
     and the ledger delta vs. always-gathering (``comm_bytes_saved``).
     ``comm_plan=False`` restores the naive gather-every-step plan
     (same exact answers, byte ledger accounted the same way).
+
+    With tracing enabled (``Session(trace=True)`` or a process-default
+    tracer, see ``repro.obs``) every query's root span carries one
+    structured record per join step per attempted capacity tier --
+    decision (``gather`` / ``edge_ship`` / ``skip`` / ``edge_cached``),
+    shipped rows, ledgered bytes, binding-table occupancy, capacity
+    tier -- plus a ``final_gather`` record; the records are built from
+    the same per-step decision/rows vectors the ledger reads, so their
+    byte sum reconciles *exactly* with ``stats().comm_bytes`` and their
+    per-decision counts with the step counters.  Tracing happens on the
+    host after device results are fetched: nothing new is traced inside
+    ``shard_map``, and a disabled tracer skips record building
+    entirely.
     """
+
+    trace_name = "spmd"
 
     def __init__(self, graph: RDFGraph, site_edge_ids: Sequence[np.ndarray],
                  mesh: Optional[Mesh] = None, axis: str = "sites",
@@ -993,7 +1012,7 @@ class SpmdEngine(EngineBase):
             cap = min(cap * 2, self.max_capacity)
             self._bump("capacity_retries")
 
-    def execute(self, query: QueryGraph) -> QueryResult:
+    def _execute(self, query: QueryGraph) -> QueryResult:
         """Match ``query`` whole as one SPMD program and return the
         exact ``QueryResult`` (see class docstring for the retry /
         planning behaviour).  Raises ``NotImplementedError`` for
@@ -1035,19 +1054,23 @@ class SpmdEngine(EngineBase):
         m = self.store.num_sites
         V = len(col_of)
         spec = self._comm_spec(norm)
+        tr = self.tracer
+        trace_on = tr.enabled
         comm = 0
         if m > 1:               # 1 device: no peers, nothing ever ships
-            if self._seed_decimation(norm):
+            decimated = self._seed_decimation(norm)
+            if decimated:
                 self._bump("decimated_seed_queries")
-            for dec, srows, n_final in attempts:
+            for ai, (dec, srows, n_final) in enumerate(attempts):
                 for ji, sc in enumerate(spec):
                     d, r = int(dec[ji]), int(srows[ji])
                     row_bytes = bind_row_bytes(step_in_cols[ji])
+                    step_bytes = 0
                     if d == COMM_GATHER:
-                        comm += (m - 1) * r * row_bytes
+                        step_bytes = (m - 1) * r * row_bytes
                         self._bump("gather_steps")
                     elif d == COMM_EDGE:
-                        comm += (m - 1) * sc.edge_bytes
+                        step_bytes = (m - 1) * sc.edge_bytes
                         self._bump("edge_shipped_steps")
                         self._bump("comm_bytes_saved",
                                    (m - 1) * (r * row_bytes
@@ -1063,7 +1086,43 @@ class SpmdEngine(EngineBase):
                         self._bump("skipped_gathers")
                         if sc.prop in self.replicated_props:
                             self._bump("replication_skipped_steps")
-                comm += (m - 1) * n_final * bind_row_bytes(V)
+                    comm += step_bytes
+                    if trace_on:
+                        # one structured record per join step per
+                        # attempted tier: same vectors, same byte
+                        # formulas as the ledger above -- trace and
+                        # ledger cannot diverge
+                        tr.add_record({
+                            "kind": "comm_step", "attempt": ai,
+                            "capacity": caps[ai], "step": ji + 1,
+                            "prop": sc.prop,
+                            "decision": COMM_DECISION_NAMES[d],
+                            "rows": r, "bytes": step_bytes,
+                            "occupancy": (r / (m * caps[ai])
+                                          if d != COMM_SKIP else 0.0)})
+                final_bytes = (m - 1) * n_final * bind_row_bytes(V)
+                comm += final_bytes
+                if trace_on:
+                    tr.add_record({
+                        "kind": "comm_step", "attempt": ai,
+                        "capacity": caps[ai], "step": len(spec) + 1,
+                        "prop": -1, "decision": "final_gather",
+                        "rows": n_final, "bytes": final_bytes,
+                        "occupancy": n_final / (m * caps[ai])})
+            if trace_on:
+                tr.annotate(devices=m, capacity_tiers=caps,
+                            overflow_events=len(caps) - 1,
+                            capacity_retries=len(caps) - 1,
+                            seed_decimated=bool(decimated),
+                            comm_planner=bool(self.comm_plan))
+        elif trace_on:
+            # 1-device mesh: no peers, no collectives -- the span says
+            # so instead of carrying zero-filled step records
+            tr.annotate(devices=m, capacity_tiers=caps,
+                        overflow_events=len(caps) - 1,
+                        capacity_retries=len(caps) - 1,
+                        seed_decimated=False,
+                        comm_planner=bool(self.comm_plan))
         elapsed = time.perf_counter() - t0
         stats = ExecStats(elapsed, int(comm),
                           set(range(self.logical_sites)),

@@ -38,6 +38,14 @@ class DriftReport:
     reason: str              # "", "tv", "coverage", or "tv+coverage"
     effective_weight: float  # decayed query mass behind the decision
 
+    def to_metrics(self) -> dict:
+        """Gauge-ready view of the report (``repro_epoch_*`` names are
+        prefixed by the adaptive loop; see ``docs/observability.md``)."""
+        return {"tv_distance": self.tv_distance,
+                "coverage": self.coverage,
+                "coverage_loss": self.ref_coverage - self.coverage,
+                "effective_weight": self.effective_weight}
+
 
 def pattern_coverage(shapes: Sequence[QueryGraph], weights: np.ndarray,
                      patterns: Sequence[QueryGraph]) -> float:

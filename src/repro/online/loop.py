@@ -83,7 +83,18 @@ class EpochReport:
 class AdaptiveEngine(EngineBase):
     """Self-re-fragmenting distributed engine (control plane over
     ``DistributedEngine``).  Takes a ``PartitionPlan`` (the legacy
-    ``WorkloadPartitioner`` is accepted via its ``.plan``)."""
+    ``WorkloadPartitioner`` is accepted via its ``.plan``).
+
+    Telemetry: the tracer and metrics registry propagate to the wrapped
+    host engine (and survive engine swaps at re-partition), so a traced
+    adaptive query shows the inner ``"query"`` span of the host engine
+    nested under the adaptive root span.  Every closed epoch publishes
+    its ledger as ``repro_epoch_*`` gauges -- drift TV distance,
+    coverage loss, migration bytes, replica ships -- whose bounded
+    change-history gives the epoch ledger a queryable timeline (see
+    ``docs/observability.md``)."""
+
+    trace_name = "adaptive"
 
     def __init__(self, plan,
                  config: Optional[AdaptiveConfig] = None,
@@ -151,6 +162,24 @@ class AdaptiveEngine(EngineBase):
     def _install_hook(self) -> None:
         self.engine.post_execute_hooks.append(
             lambda q, r: self.monitor.observe(q))
+        # keep the wrapped engine on this engine's telemetry streams
+        # (fresh inner engines are built at every re-partition)
+        self.engine.set_tracer(self.tracer)
+        self.engine.set_metrics_registry(self.metrics)
+
+    def set_tracer(self, tracer) -> None:
+        """Route the adaptive root spans *and* the wrapped host
+        engine's child spans through ``tracer``."""
+        self.tracer = tracer
+        self.engine.set_tracer(tracer)
+
+    def set_metrics_registry(self, registry) -> None:
+        super().set_metrics_registry(registry)
+        self.engine.set_metrics_registry(registry)
+
+    def _epoch_gauge(self, name: str, value: float) -> None:
+        self.metrics.gauge(f"repro_epoch_{name}",
+                           backend=self.trace_name).set(value)
 
     @property
     def dict(self) -> DataDictionary:
@@ -164,7 +193,7 @@ class AdaptiveEngine(EngineBase):
         return self.pcfg.num_sites
 
     # ------------------------------------------------------------------
-    def execute(self, query: QueryGraph) -> QueryResult:
+    def _execute(self, query: QueryGraph) -> QueryResult:
         """Answer one query on the current fragmentation, feed the
         workload monitor, and close the epoch (drift check + possible
         re-partition) once ``epoch_len`` queries have accumulated.
@@ -206,6 +235,8 @@ class AdaptiveEngine(EngineBase):
         moved = 0
         deferred = 0
         makespan = 0.0
+        replica_ships = 0
+        replica_bytes = 0
         if self._cooldown > 0:
             self._cooldown -= 1
         else:
@@ -215,6 +246,8 @@ class AdaptiveEngine(EngineBase):
                 repartitioned = True
                 moved = plan.moved_bytes
                 deferred = len(plan.deferred)
+                replica_ships = len(plan.replica_ships)
+                replica_bytes = plan.replica_bytes
                 makespan = schedule_migration(
                     plan, self.pcfg.num_sites,
                     self.cfg.link_bytes_per_sec)
@@ -223,6 +256,22 @@ class AdaptiveEngine(EngineBase):
                              self._epoch_comm, self._epoch_rt, drift,
                              repartitioned, moved, deferred, makespan)
         self.epochs.append(report)
+        # publish the closed epoch's ledger as gauges: the registry keeps
+        # a bounded change-history per gauge, so the sequence of epochs
+        # stays queryable from a metrics snapshot alone
+        self._epoch_gauge("index", float(self.epoch))
+        self._epoch_gauge("queries", float(self._epoch_queries))
+        self._epoch_gauge("comm_bytes", float(self._epoch_comm))
+        self._epoch_gauge("response_time_seconds", self._epoch_rt)
+        self._epoch_gauge("repartitioned", 1.0 if repartitioned else 0.0)
+        self._epoch_gauge("moved_bytes", float(moved))
+        self._epoch_gauge("deferred_moves", float(deferred))
+        self._epoch_gauge("replica_ships", float(replica_ships))
+        self._epoch_gauge("replica_bytes", float(replica_bytes))
+        self._epoch_gauge("migration_makespan_seconds", makespan)
+        if drift is not None:
+            for k, v in drift.to_metrics().items():
+                self._epoch_gauge(k, v)
         self.epoch += 1
         self._epoch_queries = 0
         self._epoch_comm = 0

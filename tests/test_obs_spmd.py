@@ -1,0 +1,150 @@
+"""SPMD trace <-> ledger reconciliation: the per-step records a traced
+SPMD query attaches to its root span must account for the engine's
+communication ledger *exactly* -- same decisions, same byte formulas --
+at any device count (CI runs this at 1, 2, and 4 devices).
+
+Two invariants per query:
+
+* the sum of traced step ``bytes`` equals the query's ``comm_bytes``
+  delta (and, aggregated, the cumulative ``stats().comm_bytes``);
+* the per-decision record counts equal the ``gather_steps`` /
+  ``edge_shipped_steps`` / ``skipped_gathers`` / ``edge_cache_hits``
+  counter deltas.
+
+On a 1-device mesh nothing ships, so both sides are zero and the root
+span carries the ``devices=1`` annotation instead of step records.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (PartitionConfig, Session, build_plan,
+                        generate_watdiv, generate_workload,
+                        make_shape_queries)
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
+
+DECISION_COUNTERS = {"gather": "gather_steps",
+                     "edge_ship": "edge_shipped_steps",
+                     "skip": "skipped_gathers",
+                     "edge_cached": "edge_cache_hits"}
+
+
+@pytest.fixture(scope="module")
+def spmd_setup():
+    g = generate_watdiv(8_000, seed=5)
+    wl = generate_workload(g, 500, seed=6)
+    plan = build_plan(g, wl, PartitionConfig(kind="vertical", num_sites=4))
+    return g, plan
+
+
+def _shape_queries(g, per_shape=3, seed=9):
+    rng = np.random.default_rng(seed)
+    p = np.asarray(g.p)
+
+    def rp():
+        return int(p[rng.integers(0, len(p))])
+
+    out = []
+    for _ in range(per_shape):
+        out.extend(make_shape_queries(rp).values())
+    return out
+
+
+def _counters(sess):
+    extra = sess.stats().extra
+    return {k: extra[k] for k in DECISION_COUNTERS.values()}
+
+
+def test_spmd_trace_reconciles_with_ledger(spmd_setup):
+    g, plan = spmd_setup
+    tracer = Tracer(enabled=True, capacity=256)
+    sess = Session(plan, backend="spmd", tracer=tracer,
+                   metrics_registry=MetricsRegistry())
+    m = sess.engine.store.num_sites
+    total_traced = 0
+    for q in _shape_queries(g):
+        before_comm = sess.stats().comm_bytes
+        before = _counters(sess)
+        sess.execute(q)
+        delta_comm = sess.stats().comm_bytes - before_comm
+        after = _counters(sess)
+        root = tracer.store.spans()[-1]
+        assert root.name == "query" and root.attrs["backend"] == "spmd"
+        assert root.attrs["devices"] == m
+
+        recs = [r for r in root.records if r["kind"] == "comm_step"]
+        # invariant 1: traced step bytes sum to the ledger exactly
+        assert sum(r["bytes"] for r in recs) == delta_comm
+        total_traced += delta_comm
+
+        # invariant 2: per-decision record counts == counter deltas
+        for decision, counter in DECISION_COUNTERS.items():
+            n_rec = sum(1 for r in recs if r["decision"] == decision)
+            assert n_rec == after[counter] - before[counter], \
+                f"{decision} records disagree with {counter}"
+
+        if m > 1:
+            # exactly one final gather per attempted capacity tier
+            finals = [r for r in recs if r["decision"] == "final_gather"]
+            assert len(finals) == len(root.attrs["capacity_tiers"])
+            assert root.attrs["capacity_retries"] == \
+                len(root.attrs["capacity_tiers"]) - 1
+            for r in recs:
+                assert r["bytes"] >= 0
+                assert 0.0 <= r["occupancy"] <= 1.0
+        else:
+            assert recs == [] and delta_comm == 0
+
+    # aggregate: the whole traced stream reconciles with the ledger
+    assert total_traced == sess.stats().comm_bytes
+
+
+def test_spmd_trace_covers_retry_tiers(spmd_setup):
+    """A query forced through the overflow retry ladder traces every
+    attempted tier, and the bytes of *all* tiers are ledgered."""
+    g, plan = spmd_setup
+    tracer = Tracer(enabled=True, capacity=64)
+    sess = Session(plan, backend="spmd", tracer=tracer,
+                   metrics_registry=MetricsRegistry(),
+                   spmd_capacity=8, spmd_max_capacity=1 << 20)
+    q = _shape_queries(g, per_shape=1)[0]
+    sess.execute(q)
+    root = tracer.store.spans()[-1]
+    tiers = root.attrs["capacity_tiers"]
+    assert tiers == sorted(tiers)
+    recs = [r for r in root.records if r["kind"] == "comm_step"]
+    assert sum(r["bytes"] for r in recs) == sess.stats().comm_bytes
+    if sess.engine.store.num_sites > 1 and len(tiers) > 1:
+        # each attempt contributes a full set of step records
+        attempts = {r["attempt"] for r in recs}
+        assert attempts == set(range(len(tiers)))
+        assert {r["capacity"] for r in recs} == set(tiers)
+
+
+def test_spmd_disabled_tracer_records_nothing(spmd_setup):
+    g, plan = spmd_setup
+    tracer = Tracer(enabled=False)
+    sess = Session(plan, backend="spmd", tracer=tracer,
+                   metrics_registry=MetricsRegistry())
+    sess.execute(_shape_queries(g, per_shape=1)[0])
+    assert len(tracer.store) == 0
+    # the ledger is tracing-independent
+    assert sess.stats().queries == 1
+
+
+def test_spmd_ledger_identical_traced_vs_untraced(spmd_setup):
+    """Enabling tracing must not change results or the ledger (tracing
+    is host-side only; nothing new is traced inside shard_map)."""
+    g, plan = spmd_setup
+    qs = _shape_queries(g, per_shape=2)
+    plain = Session(plan, backend="spmd",
+                    metrics_registry=MetricsRegistry())
+    traced = Session(plan, backend="spmd", trace=True,
+                     metrics_registry=MetricsRegistry())
+    rows_plain = [plain.execute(q).num_rows for q in qs]
+    rows_traced = [traced.execute(q).num_rows for q in qs]
+    assert rows_plain == rows_traced
+    sp, st = plain.stats(), traced.stats()
+    assert sp.comm_bytes == st.comm_bytes
+    assert sp.extra["gather_steps"] == st.extra["gather_steps"]
+    assert sp.extra["skipped_gathers"] == st.extra["skipped_gathers"]
