@@ -375,8 +375,88 @@ def bench_latency() -> None:
                  float(abs(traced - ledger)))
 
 
+# ----------------------------------------------------------------------
+# Serving front door (repro.serve): three claims on one seeded
+# star/chain/cycle workload.  (1) Parity -- answers through the full
+# admission -> micro-batch -> dispatch path are set-identical to direct
+# Session.execute on every backend.  (2) Amortization -- shape-keyed
+# micro-batched SPMD dispatch (one device run per shape group,
+# `batch_shape_hits` reuses) beats the sequential per-query baseline on
+# the same offered load (`batched_ge_seq` row).  (3) The RFC-003
+# capacity model -- offered load at 1x/4x/16x of the measured
+# sequential base rate, reporting achieved qps (and qps/device),
+# p50/p99 admission-to-completion latency, and the shed rate per tier.
+# ----------------------------------------------------------------------
+
+def _answer_set(res):
+    """(sorted vars, set of binding tuples) -- order-insensitive
+    answer identity."""
+    vars_sorted = sorted(res.bindings)
+    cols = [np.asarray(res.bindings[v]).tolist() for v in vars_sorted]
+    return tuple(vars_sorted), set(zip(*cols)) if cols else set()
+
+
+def bench_serve() -> None:
+    from repro.serve import FrontDoor, FrontDoorConfig, measure_capacity
+
+    g, wl = _setup(n_triples=8_000, n_queries=500, seed=5)
+    plan = build_plan(g, wl, PartitionConfig(kind="vertical", num_sites=4))
+    queries = [q for qs in _shape_workload(g).values() for q in qs]
+
+    # (1) served-vs-direct parity, every backend
+    for backend in BACKENDS:
+        sess = Session(plan, backend=backend)
+        direct = [sess.execute(q) for q in queries]
+        with sess.serve(max_batch=8, max_delay_ms=1.0) as door:
+            futs = [door.submit(q, deadline_s=120.0) for q in queries]
+            served = [f.result(timeout=120) for f in futs]
+        emit("bench_serve", backend, "parity_mismatches",
+             float(sum(_answer_set(a) != _answer_set(b)
+                       for a, b in zip(direct, served))))
+
+    # (2) sequential per-query dispatch vs shape-keyed micro-batching,
+    # same queries, same engine, jit cache warm for both arms
+    sess = Session(plan, backend="spmd")
+    offered = queries * 4
+    sess.execute_many(queries, batch_size=len(queries))      # warm-up
+    t0 = time.perf_counter()
+    for q in offered:
+        sess.execute(q)
+    wall_seq = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sess.execute_many(offered, batch_size=len(offered))
+    wall_batched = time.perf_counter() - t0
+    emit("bench_serve", "spmd", "qps_sequential",
+         len(offered) / max(wall_seq, 1e-12))
+    emit("bench_serve", "spmd", "qps_batched",
+         len(offered) / max(wall_batched, 1e-12))
+    emit("bench_serve", "spmd", "batch_shape_hits",
+         sess.stats().extra["batch_shape_hits"])
+    emit("bench_serve", "spmd_batched_vs_seq", "batched_ge_seq",
+         float(wall_batched <= wall_seq))
+
+    # (3) capacity model: fresh door per tier over the warm session
+    t0 = time.perf_counter()
+    for q in queries:
+        sess.execute(q)
+    base_qps = len(queries) / max(time.perf_counter() - t0, 1e-12)
+    emit("bench_serve", "capacity", "base_qps", base_qps)
+    reports = measure_capacity(
+        lambda: FrontDoor(sess, FrontDoorConfig(
+            max_queue=256, max_batch=8, max_delay_ms=2.0)),
+        queries, base_qps, multipliers=(1.0, 4.0, 16.0),
+        duration_s=1.0, seed=11, deadline_s=5.0)
+    n_dev = sess.stats().extra["devices"]
+    for rep in reports:
+        variant = f"load_{rep.offered_multiplier:g}x"
+        for metric, value in rep.to_row().items():
+            emit("bench_serve", variant, metric, float(value))
+        emit("bench_serve", variant, "qps_per_device",
+             rep.achieved_qps / max(n_dev, 1.0))
+
+
 ALL = [bench_minsup, bench_throughput, bench_response, bench_scalability,
        bench_redundancy, bench_offline, bench_queries, bench_engine_parity,
-       bench_spmd_comm, bench_spmd_replication, bench_latency]
+       bench_spmd_comm, bench_spmd_replication, bench_latency, bench_serve]
 
 SMOKE = [bench_engine_parity, bench_latency]

@@ -7,8 +7,11 @@ serializable ``PartitionPlan``, answers queries through a ``Session``
 through disk, serves the same plan on the jit/shard_map SPMD backend
 (size-aware communication planning included), re-runs the offline phase
 with an allocation-aware replication budget (hot properties land on
-every site, their join steps skip the collectives), and verifies the
-answers against direct matching on the whole graph.
+every site, their join steps skip the collectives), verifies the
+answers against direct matching on the whole graph, and finally serves
+the same queries through the production front door
+(``Session.serve()`` -> ``repro.serve``: admission control + deadlines
++ circuit breaker + shape-keyed micro-batching).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -93,6 +96,20 @@ def main() -> None:
           f"comm_bytes {st.comm_bytes} -> {rst.comm_bytes}, "
           f"replication-skipped steps = "
           f"{rst.extra['replication_skipped_steps']:.0f}")
+
+    # 7) serving: Session.serve() wraps the backend in the production
+    #    front door (repro.serve) -- bounded admission queue, deadlines,
+    #    circuit breaker, and shape-keyed micro-batching: concurrent
+    #    requests sharing a normalized shape dispatch as ONE batch, so
+    #    the SPMD engine runs the compiled program once per shape group.
+    with spmd.serve(max_batch=8, max_delay_ms=2.0) as door:
+        futs = [door.submit(q, deadline_s=60.0) for q in small]
+        served = [f.result(timeout=60.0) for f in futs]
+    assert [r.num_rows for r in served] == want[:8]
+    hits = spmd.stats().extra.get("batch_shape_hits", 0.0)
+    print(f"served 8/8 queries through the front door exactly "
+          f"(queue_depth drained to {door.queue_depth}, breaker "
+          f"{door.breaker_state!r}, shape-group reuse hits={hits:.0f})")
 
 
 if __name__ == "__main__":

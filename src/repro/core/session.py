@@ -166,6 +166,35 @@ class Session:
         """
         return self.engine.execute_many(queries, batch_size=batch_size)
 
+    def serve(self, config=None, *, start: bool = False, **kw):
+        """Build a serving front door (``repro.serve.FrontDoor``) over
+        this session's engine: bounded admission, load shedding,
+        per-request deadlines, circuit breaking, and shape-keyed
+        micro-batching (see ``docs/serving.md``).
+
+        Args:
+            config: a ``repro.serve.FrontDoorConfig``; built from
+                ``**kw`` (``max_queue=...``, ``max_batch=...``, ...)
+                when omitted.
+            start: spawn the dispatcher thread immediately (the door
+                also works as a context manager: ``with session.serve()
+                as door: ...``).
+            **kw: ``FrontDoorConfig`` fields, used only when ``config``
+                is ``None``.
+
+        Returns:
+            A ``FrontDoor`` bound to this session's engine, tracer, and
+            metrics registry.
+        """
+        # lazy import: repro.serve imports repro.core, not vice versa
+        from ..serve.frontdoor import FrontDoor, FrontDoorConfig
+        if config is None:
+            config = FrontDoorConfig(**kw)
+        elif kw:
+            raise ValueError(f"pass either config or field overrides, "
+                             f"not both (got config and {sorted(kw)})")
+        return FrontDoor(self, config, start=start)
+
     def stats(self) -> EngineStats:
         """Cumulative counters (see ``docs/observability.md`` for the
         ``extra`` key catalogue), stamped with this session's backend

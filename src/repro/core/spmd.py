@@ -926,6 +926,12 @@ class SpmdEngine(EngineBase):
         # re-climbing (and re-executing) every lower tier
         self._cap_hints: Dict[Tuple, int] = {}
         self._compiles = 0
+        # batch-level shape sharing (_execute_batch): while a group of
+        # same-normalized-shape queries executes, the first member's
+        # device run is parked here and every later member reuses it
+        self._shared_run = None
+        self._shared_run_key: Optional[Tuple] = None
+        self._bump("batch_shape_hits", 0)
         self._bump("capacity_retries", 0)
         self._bump("overflow_events", 0)
         self._bump("gather_steps", 0)
@@ -1024,7 +1030,20 @@ class SpmdEngine(EngineBase):
                 "property labels would match the -1 padding)")
         t0 = time.perf_counter()
         norm = query.normalize()
-        bind, valid, caps, attempts = self._run_exact(norm)
+        # batch-level shape sharing: inside an _execute_batch group the
+        # matcher output is identical for every member (same normalized
+        # pattern, same store), so run the device program once and let
+        # the rest of the group reuse (bind, valid, caps, attempts) --
+        # per-query constants are re-applied host-side below either way
+        reused = (self._shared_run is not None
+                  and self._shared_run_key == norm.edges)
+        if reused:
+            bind, valid, caps, attempts = self._shared_run
+            self._bump("batch_shape_hits")
+        else:
+            bind, valid, caps, attempts = self._run_exact(norm)
+            if self._shared_run_key == norm.edges:
+                self._shared_run = (bind, valid, caps, attempts)
         rows = bind[valid]
         if rows.size:
             rows = np.unique(rows, axis=0)
@@ -1057,7 +1076,16 @@ class SpmdEngine(EngineBase):
         tr = self.tracer
         trace_on = tr.enabled
         comm = 0
-        if m > 1:               # 1 device: no peers, nothing ever ships
+        if reused:
+            # the device run -- and every collective in it -- happened
+            # once, for the group's first member; this member put
+            # nothing on the wire and re-counting the shared steps
+            # would double-ledger them
+            if trace_on:
+                tr.annotate(devices=m, capacity_tiers=caps,
+                            shape_reused=True,
+                            comm_planner=bool(self.comm_plan))
+        elif m > 1:             # 1 device: no peers, nothing ever ships
             decimated = self._seed_decimation(norm)
             if decimated:
                 self._bump("decimated_seed_queries")
@@ -1128,6 +1156,42 @@ class SpmdEngine(EngineBase):
                           set(range(self.logical_sites)),
                           {j: elapsed / max(m, 1) for j in range(m)}, n, 1)
         return self._finish(query, QueryResult(bindings, n, stats))
+
+    def _execute_batch(self, batch: List[QueryGraph]) -> List[QueryResult]:
+        """Group intra-batch queries by normalized shape key before
+        dispatch.
+
+        Queries sharing ``query.normalize().edges`` hit the same jit
+        cache entry AND -- because normalization strips the constants
+        that differ between them -- produce the *identical* matcher
+        output over this engine's store.  The sequential default would
+        pay one full device round-trip per query; here each group runs
+        the device program once and every later member reuses the
+        binding tables, applying only its own host-side constant filter
+        (counted as ``batch_shape_hits``, comm attributed to the first
+        member only).  Results come back in input order, answers
+        identical to sequential execution.
+        """
+        groups: Dict[Tuple, List[int]] = {}
+        for i, q in enumerate(batch):
+            if any(e.prop == PROP_VAR for e in q.edges):
+                # will raise in _execute; keep it alone in its group so
+                # the error surfaces for exactly this query
+                groups.setdefault(("__prop_var__", i), []).append(i)
+            else:
+                groups.setdefault(q.normalize().edges, []).append(i)
+        out: List[Optional[QueryResult]] = [None] * len(batch)
+        for key, idxs in groups.items():
+            share = len(idxs) > 1 and not isinstance(key[0], str)
+            self._shared_run_key = key if share else None
+            self._shared_run = None
+            try:
+                for i in idxs:
+                    out[i] = self.execute(batch[i])
+            finally:
+                self._shared_run_key = None
+                self._shared_run = None
+        return out
 
     def _stats_extra(self) -> Dict[str, float]:
         return {"compiled_shapes": float(self._compiles),

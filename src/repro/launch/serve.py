@@ -1,5 +1,11 @@
-"""Batched serving driver: prefill + decode loop against the KV/SSM
-cache, greedy sampling, request batching with continuous slot reuse.
+"""LM decode-loop demo of the serving substrate (NOT the RDF query
+serving layer -- that is ``repro.serve``, the production front door
+with admission control / micro-batching over the query engines).
+
+This module drives the language-model side of the repo: prefill +
+decode loop against the KV/SSM cache, greedy sampling, request
+batching with continuous slot reuse -- the throughput-experiment
+substrate.
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
       --batch 4 --prompt-len 16 --gen-len 32
@@ -81,7 +87,11 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 16,
 
 
 def main() -> int:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.serve",
+        description="LM decode-loop demo (prefill + greedy decode). "
+                    "For the RDF query serving front door, use "
+                    "python -m repro.serve / repro.serve.FrontDoor.")
     ap.add_argument("--arch", required=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -91,7 +101,7 @@ def main() -> int:
     args = ap.parse_args()
     r = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
               gen_len=args.gen_len, smoke=args.smoke)
-    print(f"[serve] generated {r.tokens.shape} tokens; "
+    print(f"[launch.serve/lm] generated {r.tokens.shape} tokens; "
           f"prefill {r.prefill_sec:.2f}s decode {r.decode_sec:.2f}s "
           f"({r.tokens_per_sec:.1f} tok/s)")
     return 0

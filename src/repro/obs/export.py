@@ -48,6 +48,30 @@ REQUIRED_METRICS = (
     "repro_skipped_gathers_total",
     "repro_comm_bytes_saved_total",
     "repro_edge_cache_hits_total",
+    "repro_batch_shape_hits_total",
+)
+
+#: Additional names a process running the serving front door
+#: (``repro.serve.FrontDoor``) exposes -- pre-registered at FrontDoor
+#: construction, before any request is admitted.  Kept separate from
+#: ``REQUIRED_METRICS`` because engine-only processes (the plain smoke
+#: bench) never build a front door; the serve smoke validates against
+#: ``REQUIRED_METRICS + REQUIRED_SERVE_METRICS``.
+REQUIRED_SERVE_METRICS = (
+    "repro_serve_admitted_total",
+    "repro_serve_completed_total",
+    "repro_serve_failed_total",
+    "repro_serve_shed_queue_full_total",
+    "repro_serve_shed_breaker_total",
+    "repro_serve_deadline_expired_total",
+    "repro_serve_batches_total",
+    "repro_serve_batch_fallbacks_total",
+    "repro_serve_breaker_opens_total",
+    "repro_serve_queue_depth",
+    "repro_serve_breaker_state",
+    "repro_serve_latency_seconds",
+    "repro_serve_queue_wait_seconds",
+    "repro_serve_batch_size",
 )
 
 

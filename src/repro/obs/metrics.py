@@ -29,12 +29,20 @@ Design points:
 The default registry is process-wide (``get_registry``) so several
 engines aggregate into one exportable surface; tests install a fresh
 one via ``set_registry``.
+
+Thread safety: the serving front door (``repro.serve``) updates these
+series from its dispatcher thread while client threads submit and
+exporters scrape, so every mutation (``inc`` / ``set`` / ``observe`` /
+registry ``_get``/``merge``/``reset``) and every multi-field read
+(``collect``, ``percentile``) takes the instance's lock.  The locks are
+per-metric, so unrelated hot series never contend.
 """
 from __future__ import annotations
 
 import bisect
 import dataclasses
 import math
+import threading
 from collections import deque
 from typing import (Any, Deque, Dict, Iterator, List, Optional, Sequence,
                     Tuple)
@@ -57,18 +65,23 @@ def _label_items(labels: Dict[str, Any]) -> LabelItems:
 
 
 class Counter:
-    """Monotonically increasing count (``inc``)."""
+    """Monotonically increasing count (``inc``).  Thread-safe: ``+=``
+    on a Python float is a read-modify-write that loses increments
+    under concurrency, so it runs under the instance lock."""
     kind = "counter"
-    __slots__ = ("value",)
+    __slots__ = ("value", "_lock")
 
     def __init__(self) -> None:
         self.value = 0.0
+        self._lock = threading.Lock()
 
     def inc(self, amount: float = 1.0) -> None:
-        self.value += amount
+        with self._lock:
+            self.value += amount
 
     def merge(self, other: "Counter") -> None:
-        self.value += other.value
+        with self._lock:
+            self.value += other.value
 
 
 class Gauge:
@@ -80,23 +93,26 @@ class Gauge:
     the timeline stays readable.
     """
     kind = "gauge"
-    __slots__ = ("value", "history", "_seq")
+    __slots__ = ("value", "history", "_seq", "_lock")
 
     def __init__(self, history_len: int = 512) -> None:
         self.value = 0.0
         self.history: Deque[Tuple[int, float]] = deque(maxlen=history_len)
         self._seq = 0
+        self._lock = threading.Lock()
 
     def set(self, value: float) -> None:
         value = float(value)
-        self._seq += 1
-        if not self.history or self.history[-1][1] != value:
-            self.history.append((self._seq, value))
-        self.value = value
+        with self._lock:
+            self._seq += 1
+            if not self.history or self.history[-1][1] != value:
+                self.history.append((self._seq, value))
+            self.value = value
 
     def merge(self, other: "Gauge") -> None:
         # last writer wins; timelines are per-process and not merged
-        self.value = other.value
+        with self._lock:
+            self.value = other.value
 
 
 class Histogram:
@@ -109,7 +125,7 @@ class Histogram:
     (non-cumulative; the Prometheus renderer accumulates).
     """
     kind = "histogram"
-    __slots__ = ("buckets", "counts", "sum", "count")
+    __slots__ = ("buckets", "counts", "sum", "count", "_lock")
 
     def __init__(self, buckets: Sequence[float] = LATENCY_BUCKETS_SEC):
         b = tuple(float(x) for x in buckets)
@@ -120,12 +136,15 @@ class Histogram:
         self.counts = [0] * (len(b) + 1)          # +1: the +Inf bucket
         self.sum = 0.0
         self.count = 0
+        self._lock = threading.Lock()
 
     def observe(self, value: float) -> None:
         value = float(value)
-        self.counts[bisect.bisect_left(self.buckets, value)] += 1
-        self.sum += value
-        self.count += 1
+        idx = bisect.bisect_left(self.buckets, value)
+        with self._lock:
+            self.counts[idx] += 1
+            self.sum += value
+            self.count += 1
 
     def percentile(self, q: float) -> float:
         """Estimate the q-quantile (q in [0, 1]) from the bucket counts.
@@ -139,11 +158,13 @@ class Histogram:
         """
         if not 0.0 <= q <= 1.0:
             raise ValueError(f"quantile must be in [0, 1], got {q}")
-        if self.count == 0:
+        with self._lock:               # consistent (counts, count) view
+            counts, count = list(self.counts), self.count
+        if count == 0:
             return 0.0
-        rank = q * self.count
+        rank = q * count
         cum = 0
-        for i, c in enumerate(self.counts[:-1]):
+        for i, c in enumerate(counts[:-1]):
             prev = cum
             cum += c
             if cum >= rank:
@@ -159,10 +180,13 @@ class Histogram:
         if other.buckets != self.buckets:
             raise ValueError("cannot merge histograms with different "
                              f"buckets: {self.buckets} vs {other.buckets}")
-        for i, c in enumerate(other.counts):
-            self.counts[i] += c
-        self.sum += other.sum
-        self.count += other.count
+        with other._lock:              # consistent source view
+            counts, osum, ocount = list(other.counts), other.sum, other.count
+        with self._lock:
+            for i, c in enumerate(counts):
+                self.counts[i] += c
+            self.sum += osum
+            self.count += ocount
 
 
 Metric = Any  # Counter | Gauge | Histogram
@@ -174,14 +198,19 @@ class MetricsRegistry:
 
     def __init__(self) -> None:
         self._metrics: Dict[Tuple[str, LabelItems], Metric] = {}
+        self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
     def _get(self, name: str, labels: Dict[str, Any], factory) -> Metric:
         key = (name, _label_items(labels))
-        m = self._metrics.get(key)
-        if m is None:
-            m = factory()
-            self._metrics[key] = m
+        # check-then-insert must be atomic, or two threads racing on a
+        # new series each get their own instance and one side's
+        # increments silently vanish
+        with self._lock:
+            m = self._metrics.get(key)
+            if m is None:
+                m = factory()
+                self._metrics[key] = m
         return m
 
     def counter(self, name: str, **labels: Any) -> Counter:
@@ -218,13 +247,18 @@ class MetricsRegistry:
 
     # ------------------------------------------------------------------
     def collect(self) -> Iterator[Tuple[str, LabelItems, Metric]]:
-        """Every (name, labels, metric), sorted by name then labels."""
-        for (name, labels) in sorted(self._metrics):
+        """Every (name, labels, metric), sorted by name then labels
+        (iterates a stable key snapshot, so concurrent registration
+        cannot invalidate the walk)."""
+        with self._lock:
+            keys = sorted(self._metrics)
+        for (name, labels) in keys:
             yield name, labels, self._metrics[(name, labels)]
 
     def names(self) -> List[str]:
         """Distinct metric names (label sets collapsed)."""
-        return sorted({name for name, _ in self._metrics})
+        with self._lock:
+            return sorted({name for name, _ in self._metrics})
 
     def merge(self, other: "MetricsRegistry") -> None:
         """Fold ``other`` into this registry (same-typed series merge;
@@ -239,10 +273,12 @@ class MetricsRegistry:
                                **dict(labels)).merge(m)
 
     def reset(self) -> None:
-        self._metrics.clear()
+        with self._lock:
+            self._metrics.clear()
 
     def __len__(self) -> int:
-        return len(self._metrics)
+        with self._lock:
+            return len(self._metrics)
 
 
 # ----------------------------------------------------------------------

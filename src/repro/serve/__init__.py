@@ -1,0 +1,34 @@
+"""``repro.serve``: the production serving front door over the engines.
+
+Not to be confused with ``repro.launch.serve`` (the LLM decode-loop
+demo of the serving *substrate*): this package is the RDF query
+serving layer -- admission control, load shedding, deadlines, circuit
+breaking, and shape-keyed micro-batching over any ``Engine``-protocol
+backend (``docs/serving.md``).
+
+Quick use::
+
+    session = Session(plan, backend="spmd")
+    with session.serve(max_batch=16, max_delay_ms=2.0) as door:
+        fut = door.submit(query, deadline_s=1.0)
+        result = fut.result()
+
+``python -m repro.serve --smoke`` runs the seeded open-loop smoke:
+a short load-generator run against an SPMD session with snapshot
+validation and a ``repro.bench/v1`` capacity record.
+"""
+from .batcher import Batch, ShapeBatcher, shape_key
+from .frontdoor import (BreakerOpenError, CircuitBreaker,
+                        DeadlineExceededError, FrontDoor, FrontDoorConfig,
+                        QueueFullError, ServeFuture, ShedError)
+from .loadgen import (LoadgenReport, arrival_offsets, measure_capacity,
+                      run_open_loop)
+
+__all__ = [
+    "Batch", "ShapeBatcher", "shape_key",
+    "FrontDoor", "FrontDoorConfig", "CircuitBreaker", "ServeFuture",
+    "ShedError", "QueueFullError", "BreakerOpenError",
+    "DeadlineExceededError",
+    "LoadgenReport", "arrival_offsets", "run_open_loop",
+    "measure_capacity",
+]

@@ -411,3 +411,96 @@ def test_required_metrics_pre_registered(tiny_plan):
     sess.execute(wl.queries[0])                # registers _finish metrics
     doc = snapshot(registry=reg)
     validate_snapshot(doc, required=REQUIRED_METRICS)
+
+
+# ----------------------------------------------------------------------
+# Thread safety: the serving front door hammers these series from a
+# dispatcher thread while submit threads shed/count and exporters
+# scrape, so lost updates here silently corrupt the capacity model.
+# ----------------------------------------------------------------------
+
+def test_metrics_concurrent_hammer():
+    """N threads x M updates on the SAME counter/gauge/histogram plus
+    racing first-registration through the registry: final counts must
+    be exact (the unlocked `+=` / check-then-insert versions lose
+    updates and duplicate instances under this load)."""
+    import threading
+
+    reg = MetricsRegistry()
+    n_threads, n_iter = 8, 2_000
+    barrier = threading.Barrier(n_threads)
+    errors = []
+
+    def hammer(tid: int) -> None:
+        try:
+            barrier.wait()
+            for i in range(n_iter):
+                # racing fetch-or-create of shared series every round:
+                # a lost race would hand this thread a private instance
+                # whose increments vanish from the registry
+                reg.counter("hammer_total", backend="serve").inc()
+                reg.histogram("hammer_seconds",
+                              backend="serve").observe(i * 1e-4)
+                reg.gauge("hammer_depth", backend="serve").set(float(i))
+                reg.counter(f"private_{tid}_total").inc()
+        except Exception as exc:  # pragma: no cover - failure reporting
+            errors.append(exc)
+
+    threads = [threading.Thread(target=hammer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    total = n_threads * n_iter
+    assert reg.counter("hammer_total", backend="serve").value == total
+    h = reg.histogram("hammer_seconds", backend="serve")
+    assert h.count == total
+    assert sum(h.counts) == total                # no torn bucket writes
+    for t in range(n_threads):
+        assert reg.counter(f"private_{t}_total").value == n_iter
+    g = reg.gauge("hammer_depth", backend="serve")
+    assert 0.0 <= g.value <= float(n_iter - 1)
+
+
+def test_metrics_concurrent_collect_while_writing():
+    """Exporters scrape (collect + percentile) concurrently with
+    writers; the walk must never blow up on a mid-registration dict and
+    percentiles must read a consistent (counts, count) pair."""
+    import threading
+
+    reg = MetricsRegistry()
+    stop = threading.Event()
+    errors = []
+
+    def writer(tid: int) -> None:
+        try:
+            i = 0
+            while not stop.is_set():
+                reg.counter(f"w{tid}_{i % 50}_total").inc()
+                reg.histogram("lat_seconds").observe((i % 100) * 1e-4)
+                i += 1
+        except Exception as exc:  # pragma: no cover
+            errors.append(exc)
+
+    def scraper() -> None:
+        try:
+            while not stop.is_set():
+                for _name, _labels, m in reg.collect():
+                    if isinstance(m, Histogram):
+                        assert m.percentile(0.99) >= 0.0
+                snapshot(registry=reg)
+        except Exception as exc:  # pragma: no cover
+            errors.append(exc)
+
+    threads = [threading.Thread(target=writer, args=(t,))
+               for t in range(4)] + [threading.Thread(target=scraper)]
+    for t in threads:
+        t.start()
+    import time as _time
+    _time.sleep(0.3)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors
