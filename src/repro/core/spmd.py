@@ -1182,7 +1182,9 @@ class SpmdEngine(EngineBase):
                 groups.setdefault(q.normalize().edges, []).append(i)
         out: List[Optional[QueryResult]] = [None] * len(batch)
         for key, idxs in groups.items():
-            share = len(idxs) > 1 and not isinstance(key[0], str)
+            # key[:1] is safe on the empty tuple (zero-edge queries
+            # normalize to an empty edge key), unlike key[0]
+            share = len(idxs) > 1 and key[:1] != ("__prop_var__",)
             self._shared_run_key = key if share else None
             self._shared_run = None
             try:

@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import warnings
 from collections import deque
 from typing import Any, Deque, Dict, List, Optional
 
@@ -132,8 +133,18 @@ class CircuitBreaker:
 
     Outcomes are per *dispatch* (one engine call), not per request:
     the breaker protects the backend, and the backend is touched once
-    per batch.  Sheds and deadline drops are load signals, not backend
-    failures, and are never recorded here.
+    per batch.  Because the micro-batcher can collapse several admitted
+    probes into ONE dispatch, a successful half-open dispatch must
+    credit every probe it carried (``record(..., n=...)``) -- otherwise
+    the probe budget drains faster than successes accrue and the
+    breaker wedges half-open, shedding forever.  ``refund`` returns the
+    slot of an admitted probe that will never produce an outcome
+    (shed, or deadline-dropped before dispatch), and as a backstop
+    ``allow`` re-opens a half-open breaker whose probes have been out
+    for a full cooldown with no resolution, so a leaked slot costs one
+    extra cooldown instead of permanent shed.  Sheds and deadline drops
+    are load signals, not backend failures, and are never recorded
+    here.
     """
 
     def __init__(self, window: int = 32, min_events: int = 8,
@@ -146,6 +157,7 @@ class CircuitBreaker:
         self.probes = int(probes)
         self._outcomes: Deque[bool] = deque(maxlen=int(window))
         self._opened_at = 0.0
+        self._half_opened_at = 0.0
         self._probe_budget = 0
         self._probe_successes = 0
         self.opens_total = 0
@@ -161,21 +173,31 @@ class CircuitBreaker:
             if now - self._opened_at < self.cooldown_s:
                 return False
             self.state = BREAKER_HALF_OPEN
+            self._half_opened_at = now
             self._probe_budget = self.probes
             self._probe_successes = 0
         # half-open: bounded probe admissions
         if self._probe_budget <= 0:
+            # stall backstop: if the outstanding probes have produced
+            # no resolution for a full cooldown (outcome lost, probe
+            # hung), re-open so the next cooldown mints fresh budget
+            # instead of shedding forever
+            if now - self._half_opened_at >= self.cooldown_s:
+                self._trip(now)
             return False
         self._probe_budget -= 1
         return True
 
-    def record(self, ok: bool, now: float) -> None:
-        """Feed one dispatch outcome."""
+    def record(self, ok: bool, now: float, n: int = 1) -> None:
+        """Feed one dispatch outcome.  ``n`` is the number of admitted
+        probe slots this dispatch resolves (a half-open micro-batch can
+        carry several probes in one engine call); every successful
+        half-open dispatch credits at least one."""
         if self.state == BREAKER_HALF_OPEN:
             if not ok:
                 self._trip(now)
             else:
-                self._probe_successes += 1
+                self._probe_successes += max(int(n), 1)
                 if self._probe_successes >= self.probes:
                     self.state = BREAKER_CLOSED
                     self._outcomes.clear()
@@ -186,6 +208,16 @@ class CircuitBreaker:
             failures = sum(1 for o in self._outcomes if not o)
             if failures / len(self._outcomes) >= self.failure_ratio:
                 self._trip(now)
+
+    def refund(self, n: int = 1) -> None:
+        """Return ``n`` probe slots whose requests were admitted in
+        half-open but will never produce a dispatch outcome (shed
+        before reaching the engine, or deadline-dropped in queue), so
+        later submissions can probe instead of being shed on an
+        exhausted budget."""
+        if self.state == BREAKER_HALF_OPEN:
+            self._probe_budget = min(self._probe_budget + max(int(n), 0),
+                                     self.probes)
 
     def _trip(self, now: float) -> None:
         self.state = BREAKER_OPEN
@@ -238,6 +270,9 @@ class _Request:
     enqueued_at: float
     deadline: float
     future: ServeFuture
+    #: admitted against a half-open probe slot; its slot must be either
+    #: resolved by a dispatch outcome or refunded if dropped first
+    probe: bool = False
 
 
 class FrontDoor:
@@ -327,13 +362,9 @@ class FrontDoor:
         """
         now = self.clock()
         with self._cond:
-            if not self.breaker.allow(now):
-                self._counters["shed_breaker"].inc()
-                self._g_breaker.set(_BREAKER_GAUGE[self.breaker.state])
-                raise BreakerOpenError(
-                    f"circuit breaker {self.breaker.state}: backend "
-                    f"marked unhealthy, request shed")
-            self._g_breaker.set(_BREAKER_GAUGE[self.breaker.state])
+            # capacity first: a queue-full shed must not consume a
+            # half-open probe slot (its outcome would never be
+            # recorded, wedging the breaker on an empty budget)
             depth = self.batcher.depth + self._inflight
             if depth >= self.config.max_queue:
                 self._counters["shed_queue_full"].inc()
@@ -341,10 +372,24 @@ class FrontDoor:
                     f"admission queue full ({depth}/"
                     f"{self.config.max_queue} requests pending), "
                     f"request shed")
+            opens_before = self.breaker.opens_total
+            allowed = self.breaker.allow(now)
+            if self.breaker.opens_total > opens_before:
+                # the half-open stall backstop re-opened the breaker
+                self._counters["breaker_opens"].inc()
+            if not allowed:
+                self._counters["shed_breaker"].inc()
+                self._g_breaker.set(_BREAKER_GAUGE[self.breaker.state])
+                raise BreakerOpenError(
+                    f"circuit breaker {self.breaker.state}: backend "
+                    f"marked unhealthy, request shed")
+            self._g_breaker.set(_BREAKER_GAUGE[self.breaker.state])
             fut = ServeFuture()
             ttl = (deadline_s if deadline_s is not None
                    else self.config.default_deadline_s)
-            self.batcher.add(_Request(query, now, now + ttl, fut))
+            self.batcher.add(_Request(
+                query, now, now + ttl, fut,
+                probe=self.breaker.state == BREAKER_HALF_OPEN))
             self._counters["admitted"].inc()
             self._g_depth.set(self.batcher.depth + self._inflight)
             self._cond.notify()
@@ -388,9 +433,11 @@ class FrontDoor:
         breaker."""
         now = self.clock()
         live: List[_Request] = []
+        dropped_probes = 0
         for r in batch.requests:
             if now >= r.deadline:
                 self._counters["deadline_expired"].inc()
+                dropped_probes += r.probe
                 r.future._complete(
                     None, "deadline",
                     DeadlineExceededError(
@@ -398,6 +445,11 @@ class FrontDoor:
                         f"in queue; request dropped before execution"))
             else:
                 live.append(r)
+        if dropped_probes:
+            # dropped probes never reach the engine, so their outcomes
+            # never resolve their half-open slots: refund them
+            with self._cond:
+                self.breaker.refund(dropped_probes)
         try:
             if live:
                 self._execute_live(live, batch)
@@ -422,6 +474,7 @@ class FrontDoor:
                 self._h_wait.observe(wait)
                 tracer.add_record({"kind": "admission",
                                    "queue_wait_s": wait})
+            n_probes = sum(1 for r in live if r.probe)
             try:
                 # one dispatch for the whole same-shape bucket: the
                 # SPMD engine's batch override runs the compiled
@@ -443,7 +496,10 @@ class FrontDoor:
                 for r in live:
                     self._fail_one(r)
                 return
-            self._record_outcome(ok=True)
+            # a successful dispatch resolves every probe it carried
+            # (micro-batching can collapse all of them into this one
+            # engine call); any success in half-open counts at least 1
+            self._record_outcome(ok=True, probes=n_probes)
             done = self.clock()
             for r, res in zip(live, results):
                 self._counters["completed"].inc()
@@ -455,7 +511,22 @@ class FrontDoor:
         """Per-request fallback execution (after a multi-request batch
         dispatch failed): run it alone; settle its future either way.
         Each fallback run is a real backend dispatch, so it feeds the
-        breaker too."""
+        breaker too.  The deadline is re-checked first: the failed
+        batch dispatch may have been slow, and work that can no longer
+        be useful is not executed."""
+        now = self.clock()
+        if now >= r.deadline:
+            self._counters["deadline_expired"].inc()
+            if r.probe:
+                with self._cond:
+                    self.breaker.refund(1)
+            r.future._complete(
+                None, "deadline",
+                DeadlineExceededError(
+                    f"deadline passed after {now - r.enqueued_at:.3f}s "
+                    f"(batch dispatch failed slowly); request dropped "
+                    f"before fallback execution"))
+            return
         try:
             res = self.engine.execute_many([r.query], batch_size=1)[0]
         except Exception as exc:
@@ -463,16 +534,16 @@ class FrontDoor:
             self._counters["failed"].inc()
             r.future._complete(None, "failed", exc)
             return
-        self._record_outcome(ok=True)
+        self._record_outcome(ok=True, probes=1 if r.probe else 0)
         lat = self.clock() - r.enqueued_at
         self._counters["completed"].inc()
         self._h_latency.observe(lat)
         r.future._complete(res, "completed", latency_s=lat)
 
-    def _record_outcome(self, ok: bool) -> None:
+    def _record_outcome(self, ok: bool, probes: int = 1) -> None:
         with self._cond:
             before = self.breaker.opens_total
-            self.breaker.record(ok, self.clock())
+            self.breaker.record(ok, self.clock(), n=probes)
             if self.breaker.opens_total > before:
                 self._counters["breaker_opens"].inc()
             self._g_breaker.set(_BREAKER_GAUGE[self.breaker.state])
@@ -508,12 +579,23 @@ class FrontDoor:
     def close(self, drain: bool = True) -> None:
         """Stop the dispatcher thread; with ``drain=True`` (default)
         every still-queued request is dispatched first, so no admitted
-        future is left pending."""
+        future is left pending.  If the dispatcher fails to exit
+        (engine call hung), the drain is skipped with a warning: the
+        caller draining alongside a live dispatcher would run two
+        threads through a single-threaded engine."""
         with self._cond:
             self._stopping = True
             self._cond.notify_all()
-        if self._thread is not None:
-            self._thread.join(timeout=30)
+        thread = self._thread
+        if thread is not None:
+            thread.join(timeout=30)
+            if thread.is_alive():
+                warnings.warn(
+                    "front-door dispatcher thread did not exit within "
+                    "30s (engine call hung?); skipping drain to keep "
+                    "the engine single-threaded -- pending futures stay "
+                    "unresolved", RuntimeWarning, stacklevel=2)
+                return
             self._thread = None
         if drain:
             self.drain()

@@ -285,6 +285,141 @@ def test_door_breaker_closed_open_halfopen_closed():
     assert f.result(0) == "ra:11"
 
 
+def test_breaker_probes_collapsed_into_one_dispatch_still_close():
+    """Regression: with breaker_probes=2, two same-shape probes collapse
+    into ONE micro-batched dispatch -> one success outcome.  Per-request
+    crediting must close the breaker instead of wedging it half-open
+    with zero budget forever."""
+    door, eng, clk = make_door(max_batch=2, breaker_window=8,
+                               breaker_min_events=2,
+                               breaker_failure_ratio=0.5,
+                               breaker_cooldown_s=1.0, breaker_probes=2)
+    eng.fail_next = 2
+    for i in range(2):
+        f = door.submit(FakeQuery("a", i))
+        clk.advance(0.011)                       # age-flush the lone req
+        door.pump()
+        with pytest.raises(RuntimeError):
+            f.result(0)
+    assert door.breaker_state == "open"
+    clk.advance(1.5)
+    f1 = door.submit(FakeQuery("a", 10))         # probe 1
+    f2 = door.submit(FakeQuery("a", 11))         # probe 2, fills bucket
+    assert door.breaker_state == "half_open"
+    door.pump()                                  # ONE dispatch, both probes
+    assert f1.result(0) == "ra:10" and f2.result(0) == "ra:11"
+    assert eng.batches[-1] == [10, 11]
+    assert door.breaker_state == "closed"        # not wedged
+    f3 = door.submit(FakeQuery("a", 12))         # traffic flows again
+    clk.advance(0.011)
+    door.pump()
+    assert f3.result(0) == "ra:12"
+
+
+def test_queue_full_shed_does_not_consume_probe_budget():
+    """Regression: submit() used to decrement the half-open probe
+    budget before the queue-full check, so a QueueFullError leaked a
+    probe slot whose outcome could never be recorded."""
+    door, eng, clk = make_door(max_batch=1, max_queue=1,
+                               breaker_window=8, breaker_min_events=2,
+                               breaker_failure_ratio=0.5,
+                               breaker_cooldown_s=1.0, breaker_probes=2)
+    eng.fail_next = 2
+    for i in range(2):
+        f = door.submit(FakeQuery("a", i))
+        door.pump()
+        with pytest.raises(RuntimeError):
+            f.result(0)
+    assert door.breaker_state == "open"
+    clk.advance(1.5)
+    f1 = door.submit(FakeQuery("a", 10))         # probe 1 (budget 2 -> 1)
+    with pytest.raises(QueueFullError):
+        door.submit(FakeQuery("a", 11))          # shed BEFORE the breaker
+    door.pump()
+    assert f1.result(0) == "ra:10"
+    assert door.breaker_state == "half_open"     # 1 of 2 successes so far
+    f2 = door.submit(FakeQuery("a", 12))         # slot NOT leaked to shed
+    door.pump()
+    assert f2.result(0) == "ra:12"
+    assert door.breaker_state == "closed"
+
+
+def test_deadline_dropped_probe_refunds_budget():
+    """Regression: a probe admitted in half-open but dropped by
+    deadline expiry never produces a dispatch outcome; its slot must be
+    refunded or the breaker wedges on an exhausted budget."""
+    door, eng, clk = make_door(max_batch=100, max_delay_ms=10.0,
+                               breaker_window=8, breaker_min_events=2,
+                               breaker_failure_ratio=0.5,
+                               breaker_cooldown_s=1.0, breaker_probes=1)
+    eng.fail_next = 2
+    for i in range(2):
+        f = door.submit(FakeQuery("a", i))
+        clk.advance(0.011)
+        door.pump()
+        with pytest.raises(RuntimeError):
+            f.result(0)
+    assert door.breaker_state == "open"
+    clk.advance(1.5)
+    f1 = door.submit(FakeQuery("a", 10), deadline_s=0.005)  # the 1 probe
+    clk.advance(0.02)                            # expires before dispatch
+    door.pump()
+    with pytest.raises(DeadlineExceededError):
+        f1.result(0)
+    assert door.breaker_state == "half_open"
+    f2 = door.submit(FakeQuery("a", 11))         # refunded slot reused
+    clk.advance(0.011)
+    door.pump()
+    assert f2.result(0) == "ra:11"
+    assert door.breaker_state == "closed"
+
+
+def test_breaker_half_open_stall_backstop_reopens():
+    """A half-open breaker whose probe outcomes never arrive (slot
+    leaked by a crash path) re-opens after a full cooldown instead of
+    shedding forever, so fresh probe budget is eventually minted."""
+    br = CircuitBreaker(window=8, min_events=2, failure_ratio=0.5,
+                        cooldown_s=1.0, probes=1)
+    br.record(False, 0.0)
+    br.record(False, 0.0)
+    assert br.state == "open"
+    assert br.allow(1.1)                         # the only probe: leaked
+    assert not br.allow(1.2)                     # budget 0, within cooldown
+    assert br.state == "half_open"
+    assert not br.allow(2.2)                     # stalled a full cooldown
+    assert br.state == "open" and br.opens_total == 2
+    assert br.allow(3.3)                         # fresh budget minted
+    br.record(True, 3.4)
+    assert br.state == "closed"
+
+
+def test_failed_batch_fallback_rechecks_deadline():
+    """Regression: after a SLOW failed batch dispatch, per-request
+    fallback must not execute requests whose deadline already passed --
+    they complete with DeadlineExceededError and never hit the
+    backend."""
+    door, eng, clk = make_door(max_batch=2)
+    orig = eng.execute_many
+
+    def slow_failing_batch(queries, batch_size=64):
+        if len(queries) > 1:
+            clk.advance(5.0)                     # slow, then fails
+            raise RuntimeError("scripted slow batch failure")
+        return orig(queries, batch_size=batch_size)
+
+    eng.execute_many = slow_failing_batch
+    f_dead = door.submit(FakeQuery("a", 1), deadline_s=2.0)
+    f_live = door.submit(FakeQuery("a", 2), deadline_s=100.0)
+    door.pump()
+    with pytest.raises(DeadlineExceededError):
+        f_dead.result(0)
+    assert f_dead.outcome == "deadline"
+    assert f_live.result(0) == "ra:2"
+    assert eng.batches == [[2]]                  # expired one never re-ran
+    assert door.stats()["deadline_expired"] == 1
+    assert door.stats()["completed"] == 1
+
+
 def test_sheds_and_deadlines_do_not_trip_breaker():
     door, eng, clk = make_door(max_queue=2, max_batch=100,
                                breaker_min_events=1,

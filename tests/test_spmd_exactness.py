@@ -250,3 +250,16 @@ def test_execute_batch_chunks_do_not_share_across_batches(rgraph,
     for q, r in zip(queries, got):
         assert r.num_rows == _mp(rgraph, q).num_rows, \
             f"diverged on {q.edges}"
+
+
+def test_execute_batch_handles_zero_edge_group(rgraph, rqueries):
+    """Regression: two zero-edge queries normalize to the EMPTY shape
+    key, and the shape-sharing check used to read `key[0]` -- an
+    IndexError that failed the whole `execute_many` call."""
+    plan = build_plan(rgraph, Workload(list(rqueries)),
+                      PartitionConfig(kind="vertical", num_sites=4))
+    sess = Session(plan, backend="spmd")
+    q0 = QueryGraph.make([])
+    got = sess.execute_many([q0, q0, rqueries[0]], batch_size=3)
+    assert [r.num_rows for r in got[:2]] == [0, 0]
+    assert got[2].num_rows == match_pattern(rgraph, rqueries[0]).num_rows
