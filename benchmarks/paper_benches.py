@@ -373,6 +373,44 @@ def bench_latency() -> None:
             ledger = sess.stats().comm_bytes
             emit("bench_latency", "spmd", "trace_ledger_delta_bytes",
                  float(abs(traced - ledger)))
+            _write_latency_reports(spans)
+
+
+def _write_latency_reports(spans) -> None:
+    """Persist the per-join-step roofline report (from the SPMD
+    ``comm_step`` trace records gathered by ``bench_latency``) and a
+    ``repro.bench/v1`` latency record next to the other bench
+    artifacts (reports/).  Best-effort: a read-only checkout skips."""
+    import json
+    import subprocess
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).parent))
+    from roofline import join_step_report
+    try:
+        out = Path(__file__).parent.parent / "reports"
+        out.mkdir(parents=True, exist_ok=True)
+        report = join_step_report(spans)
+        (out / "join_roofline.json").write_text(
+            json.dumps(report, indent=2, sort_keys=True))
+        try:
+            rev = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                                 capture_output=True, text=True,
+                                 timeout=10).stdout.strip() or None
+        except Exception:
+            rev = None
+        latency_rows = [
+            {"bench": b, "variant": v, "metric": m, "value": val}
+            for (b, v, m, val) in ROWS if b == "bench_latency"]
+        (out / "latency.json").write_text(json.dumps({
+            "schema": "repro.bench/v1", "git_rev": rev,
+            "rows": latency_rows,
+            "join_roofline": report["totals"]},
+            indent=2, sort_keys=True))
+        emit("bench_latency", "spmd", "join_roofline_bytes",
+             float(report["totals"]["bytes"]))
+    except OSError:
+        pass
 
 
 # ----------------------------------------------------------------------

@@ -5,23 +5,71 @@
   memory term     = HBM_traffic_per_device / HBM_bw
   collective term = collective_bytes_per_device / ICI_link_bw
 
-Hardware constants: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM,
-~50 GB/s/link ICI (brief-provided).
+Hardware constants live in the ``HARDWARE`` table below, keyed by
+backend name (default ``tpu_v5e`` -- 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI, brief-provided).  Every emitted report is tagged
+with the constants actually used so numbers stay interpretable when
+the table grows or an override is applied (``constants_for``).
 
 Also reports MODEL_FLOPS (6*N*D dense / 6*N_active*D MoE; 2*N*D for
 prefill; 2*N_active*B per decode step) and the useful-compute ratio
 MODEL_FLOPS / HLO_FLOPs, which exposes remat/redundancy waste.
+
+``join_step_report`` is the SPMD-side counterpart: it folds the
+per-join-step ``comm_step`` trace records (src/repro/core/spmd.py)
+into an achieved-vs-roofline bytes report per (step, prop, decision).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Any, Dict, Iterable, List, Optional
 
-PEAK_FLOPS = 197e12        # bf16 / chip
-HBM_BW = 819e9             # bytes/s / chip
-ICI_BW = 50e9              # bytes/s / link
+import numpy as np
+
+
+# ----------------------------------------------------------------------
+# Hardware constants (labelled, overridable -- see constants_for)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HardwareConstants:
+    name: str
+    peak_flops: float      # FLOP/s per chip (bf16)
+    hbm_bw: float          # bytes/s per chip
+    ici_bw: float          # bytes/s per link
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+HARDWARE: Dict[str, HardwareConstants] = {
+    # brief-provided v5e numbers; the repo's primary target
+    "tpu_v5e": HardwareConstants("tpu_v5e", 197e12, 819e9, 50e9),
+    # public spec-sheet numbers, for comparison runs
+    "tpu_v4": HardwareConstants("tpu_v4", 275e12, 1228e9, 50e9),
+    # rough host-CPU envelope so dev-box reports are not nonsense
+    "cpu": HardwareConstants("cpu", 0.5e12, 100e9, 10e9),
+}
+DEFAULT_BACKEND = "tpu_v5e"
+
+
+def constants_for(backend: Optional[str] = None,
+                  **overrides: float) -> HardwareConstants:
+    """Resolve the constants table entry for ``backend`` (default
+    ``tpu_v5e``; unknown names fall back to the default) and apply any
+    keyword overrides, e.g. ``constants_for("tpu_v5e", ici_bw=45e9)``."""
+    hw = HARDWARE.get(backend or DEFAULT_BACKEND, HARDWARE[DEFAULT_BACKEND])
+    if overrides:
+        hw = dataclasses.replace(hw, **overrides)
+    return hw
+
+
+# legacy module-level aliases (== HARDWARE[DEFAULT_BACKEND])
+PEAK_FLOPS = HARDWARE[DEFAULT_BACKEND].peak_flops
+HBM_BW = HARDWARE[DEFAULT_BACKEND].hbm_bw
+ICI_BW = HARDWARE[DEFAULT_BACKEND].ici_bw
 
 
 # ----------------------------------------------------------------------
@@ -55,9 +103,6 @@ def _param_counts(cfg) -> Dict[str, float]:
             "active": float(n - inactive)}
 
 
-import numpy as np  # noqa: E402  (after docstring usage above)
-
-
 def model_flops(cfg, kind: str, seq: int, batch: int) -> float:
     pc = _param_counts(cfg)
     n_active = pc["active"]
@@ -88,16 +133,19 @@ class RooflineRow:
     roofline_fraction: float   # compute_s / max(term) -- MFU-style
 
 
-def analyze_report(rep: dict, chips: int) -> Optional[RooflineRow]:
+def analyze_report(rep: dict, chips: int,
+                   hw: Optional[HardwareConstants] = None
+                   ) -> Optional[RooflineRow]:
     from repro.configs import get_arch
     if rep.get("skipped"):
         return None
+    hw = hw or constants_for()
     hc = rep["hlo_accounting"]
     spec = get_arch(rep["arch"])
     sh = spec.shape(rep["shape"])
-    compute_s = hc["flops_per_device"] / PEAK_FLOPS
-    memory_s = hc["hbm_traffic_bytes_per_device"] / HBM_BW
-    coll_s = sum(hc["collective_bytes"].values()) / ICI_BW
+    compute_s = hc["flops_per_device"] / hw.peak_flops
+    memory_s = hc["hbm_traffic_bytes_per_device"] / hw.hbm_bw
+    coll_s = sum(hc["collective_bytes"].values()) / hw.ici_bw
     terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
     dom = max(terms, key=terms.get)
     mf = model_flops(spec.config, sh.kind, sh.seq_len, sh.global_batch)
@@ -111,12 +159,13 @@ def analyze_report(rep: dict, chips: int) -> Optional[RooflineRow]:
                        compute_s / step if step > 0 else 0.0)
 
 
-def load_rows(report_dir: str | Path) -> List[RooflineRow]:
+def load_rows(report_dir: str | Path,
+              hw: Optional[HardwareConstants] = None) -> List[RooflineRow]:
     rows = []
     for f in sorted(Path(report_dir).glob("*.json")):
         rep = json.loads(f.read_text())
         chips = 512 if rep.get("mesh") == "2x16x16" else 256
-        r = analyze_report(rep, chips)
+        r = analyze_report(rep, chips, hw=hw)
         if r:
             rows.append(r)
     return rows
@@ -137,12 +186,18 @@ def print_table(rows: List[RooflineRow], only_mesh: Optional[str] = "16x16"
               f"{r.roofline_fraction:6.3f}")
 
 
-def bench_roofline(report_dir: str = "reports/dryrun_baseline") -> None:
-    rows = load_rows(report_dir)
+def bench_roofline(report_dir: str = "reports/dryrun_baseline",
+                   backend: Optional[str] = None) -> None:
+    hw = constants_for(backend)
+    rows = load_rows(report_dir, hw=hw)
     if not rows:
         print(f"roofline,,status,no dry-run artifacts in {report_dir} "
               f"(run python -m repro.launch.dryrun first)")
         return
+    print(f"roofline,constants,hw,{hw.name}")
+    print(f"roofline,constants,peak_flops,{hw.peak_flops:.6g}")
+    print(f"roofline,constants,hbm_bw,{hw.hbm_bw:.6g}")
+    print(f"roofline,constants,ici_bw,{hw.ici_bw:.6g}")
     for r in rows:
         tag = f"{r.arch}/{r.shape}/{r.mesh}"
         print(f"roofline,{tag},compute_s,{r.compute_s:.6g}")
@@ -150,3 +205,79 @@ def bench_roofline(report_dir: str = "reports/dryrun_baseline") -> None:
         print(f"roofline,{tag},collective_s,{r.collective_s:.6g}")
         print(f"roofline,{tag},dominant,{r.dominant}")
         print(f"roofline,{tag},roofline_fraction,{r.roofline_fraction:.4f}")
+
+
+# ----------------------------------------------------------------------
+# SPMD per-join-step achieved-vs-roofline report (from comm_step
+# trace records -- see src/repro/core/spmd.py ledger/trace emission)
+# ----------------------------------------------------------------------
+
+def _walk_spans(spans: Iterable[Any]) -> Iterable[Any]:
+    """Yield every span (depth-first) from a mix of ``Span`` objects
+    and flat ``spans.jsonl`` dicts."""
+    for s in spans:
+        if hasattr(s, "walk"):
+            yield from s.walk()
+        else:
+            yield s
+
+
+def join_step_report(spans: Iterable[Any],
+                     hw: Optional[HardwareConstants] = None,
+                     backend: Optional[str] = None) -> Dict[str, Any]:
+    """Fold ``comm_step`` records out of finished spans into a
+    per-(step, prop, decision) achieved-vs-roofline bytes report.
+
+    ``spans`` may be ``Tracer.store.spans()`` (Span objects, children
+    walked) or rows loaded from ``spans.jsonl`` (flat dicts).  Wall
+    time is the summed duration of spans that directly carry at least
+    one ``comm_step`` record, so the achieved rate reflects end-to-end
+    query time, not just the shipping fraction.  The report is tagged
+    with the hardware-constants row used for the roofline bound."""
+    hw = hw or constants_for(backend)
+    groups: Dict[tuple, Dict[str, float]] = {}
+    total_bytes = 0
+    total_rows = 0
+    wall_s = 0.0
+    n_records = 0
+    for sp in _walk_spans(spans):
+        recs = sp.get("records") if isinstance(sp, dict) else sp.records
+        comm = [r for r in (recs or []) if r.get("kind") == "comm_step"]
+        if not comm:
+            continue
+        dur = (sp.get("duration") if isinstance(sp, dict)
+               else sp.duration) or 0.0
+        wall_s += float(dur)
+        for r in comm:
+            key = (int(r.get("step", -1)), int(r.get("prop", -1)),
+                   str(r.get("decision", "?")))
+            g = groups.setdefault(key, {"bytes": 0, "rows": 0, "records": 0})
+            g["bytes"] += int(r.get("bytes", 0))
+            g["rows"] += int(r.get("rows", 0))
+            g["records"] += 1
+            total_bytes += int(r.get("bytes", 0))
+            total_rows += int(r.get("rows", 0))
+            n_records += 1
+    steps = []
+    for (step, prop, decision), g in sorted(groups.items()):
+        steps.append({
+            "step": step, "prop": prop, "decision": decision,
+            "bytes": int(g["bytes"]), "rows": int(g["rows"]),
+            "records": int(g["records"]),
+            "bytes_per_row": (g["bytes"] / g["rows"]) if g["rows"] else 0.0,
+            "bytes_share": (g["bytes"] / total_bytes) if total_bytes else 0.0,
+            "ici_roofline_s": g["bytes"] / hw.ici_bw,
+        })
+    roofline_s = total_bytes / hw.ici_bw
+    return {
+        "schema": "repro.roofline_join/v1",
+        "constants": hw.as_dict(),
+        "totals": {
+            "bytes": int(total_bytes), "rows": int(total_rows),
+            "records": int(n_records), "wall_s": wall_s,
+            "achieved_bytes_per_s": (total_bytes / wall_s) if wall_s else 0.0,
+            "ici_roofline_s": roofline_s,
+            "ici_fraction": (roofline_s / wall_s) if wall_s else 0.0,
+        },
+        "steps": steps,
+    }

@@ -15,6 +15,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..constants import MAX_PROPERTY_ID, MAX_VERTEX_ID
+
 
 @dataclasses.dataclass
 class RDFGraph:
@@ -44,6 +46,22 @@ class RDFGraph:
         self.o = np.asarray(self.o, dtype=np.int32)
         if not (len(self.s) == len(self.p) == len(self.o)):
             raise ValueError("s/p/o must have equal length")
+        # Sentinel-collision guard: the blocked-join machinery pads key
+        # columns with INT32_MAX and row padding with -1, which is only
+        # sound while every real id stays inside the documented 21-bit
+        # bound.  Reject out-of-range ids here -- at or near the
+        # sentinel they would silently corrupt semijoin masks and edge
+        # tables instead of failing.
+        for name, arr, hi in (("s", self.s, MAX_VERTEX_ID),
+                              ("o", self.o, MAX_VERTEX_ID),
+                              ("p", self.p, MAX_PROPERTY_ID)):
+            if arr.size and (int(arr.min()) < 0 or int(arr.max()) > hi):
+                raise ValueError(
+                    f"RDFGraph.{name} ids must lie in [0, {hi}] (21-bit "
+                    f"id space; got range [{int(arr.min())}, "
+                    f"{int(arr.max())}]): ids beyond the bound can "
+                    f"collide with the INT32_MAX/-1 pad sentinels of "
+                    f"the blocked join kernels")
 
     # ------------------------------------------------------------------
     @property

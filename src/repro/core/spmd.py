@@ -68,6 +68,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..constants import INT32_SENTINEL
 from ..kernels import ref as kref
 from .engine import EngineBase
 from .executor import CostModel, ExecStats, QueryResult
@@ -103,6 +104,20 @@ class SiteStore:
     overlapping FAPs, WARP's replicated pattern matches, or several
     logical sites folded onto one device.  For such a step no
     inter-device shipping is needed at all.
+
+    ``build`` additionally packs **CSR per-property edge tables** (the
+    join hot-path layout): because rows are stored sorted by
+    (p, s, o), each property's edges form one contiguous, subject-sorted
+    run; ``csr_sub_s``/``csr_sub_o`` hold those runs (key = subject,
+    payload = object), ``csr_obj_o``/``csr_obj_s`` hold the
+    object-sorted counterpart from a second (p, o, s) sort, and
+    ``csr_offs`` (m, P+1) holds the per-device run offsets.  The match
+    loop slices one property's run per join step (a
+    ``lax.dynamic_slice`` window sized by static residency metadata)
+    instead of re-running ``argsort``/``p == prop`` scans over the full
+    padded (m, e_max) columns on every traced step.  Arrays are padded
+    ``csr_pad`` rows past the last run so a window never clamps into a
+    neighbouring property.
     """
     s: jax.Array
     p: jax.Array
@@ -112,6 +127,12 @@ class SiteStore:
     prop_dev_rows: Optional[np.ndarray] = None       # (m, P) int64
     prop_dev_distinct: Optional[np.ndarray] = None   # (m, P) int64
     prop_union_rows: Optional[np.ndarray] = None     # (P,) int64
+    csr_sub_s: Optional[jax.Array] = None   # (m, e_max + csr_pad) int32
+    csr_sub_o: Optional[jax.Array] = None
+    csr_obj_o: Optional[jax.Array] = None
+    csr_obj_s: Optional[jax.Array] = None
+    csr_offs: Optional[jax.Array] = None    # (m, P + 1) int32
+    csr_pad: int = 0
 
     @staticmethod
     def build(graph: RDFGraph, site_edge_ids: Sequence[np.ndarray],
@@ -125,6 +146,7 @@ class SiteStore:
         n_props = graph.num_properties
         dev_rows = np.zeros((m, n_props), np.int64)
         dev_distinct = np.zeros((m, n_props), np.int64)
+        per_site = []
         for j, eids in enumerate(site_edge_ids):
             eids = np.asarray(eids, np.int64)
             s, p, o = graph.s[eids], graph.p[eids], graph.o[eids]
@@ -134,12 +156,36 @@ class SiteStore:
             dev_rows[j] = np.bincount(p, minlength=n_props)[:n_props]
             dev_distinct[j] = np.bincount(
                 graph.p[np.unique(eids)], minlength=n_props)[:n_props]
+            per_site.append((s, p, o, n))
         resident = np.unique(np.concatenate(
             [np.zeros(0, np.int64)]
             + [np.asarray(e, np.int64) for e in site_edge_ids]))
         union = np.bincount(graph.p[resident], minlength=n_props)[:n_props]
+        # CSR per-property packing: the (p, s, o) sort above already
+        # groups each property into one subject-sorted run; a second
+        # (p, o, s) sort yields the object-sorted runs.  Pad past the
+        # last run by the largest window any property can ask for
+        # (max per-device run, rounded like prop_window) so a
+        # dynamic_slice window starting at the final offset stays in
+        # bounds without clamping.
+        pad = int(np.ceil(max(int(dev_rows.max(initial=1)), 1) / 8) * 8)
+        width = e_max + pad
+        sub_s = np.full((m, width), INT32_SENTINEL, np.int32)
+        sub_o = np.full((m, width), -1, np.int32)
+        obj_o = np.full((m, width), INT32_SENTINEL, np.int32)
+        obj_s = np.full((m, width), -1, np.int32)
+        offs = np.zeros((m, n_props + 1), np.int32)
+        for j, (s, p, o, n) in enumerate(per_site):
+            sub_s[j, :n], sub_o[j, :n] = S[j, :n], O[j, :n]
+            order_o = np.lexsort((s, o, p))
+            obj_o[j, :n], obj_s[j, :n] = o[order_o], s[order_o]
+            offs[j, 1:] = np.cumsum(
+                np.bincount(p, minlength=n_props)[:n_props])
         return SiteStore(jnp.asarray(S), jnp.asarray(Pm), jnp.asarray(O),
-                         m, e_max, dev_rows, dev_distinct, union)
+                         m, e_max, dev_rows, dev_distinct, union,
+                         jnp.asarray(sub_s), jnp.asarray(sub_o),
+                         jnp.asarray(obj_o), jnp.asarray(obj_s),
+                         jnp.asarray(offs), pad)
 
     def prop_shard_complete(self, prop: int) -> bool:
         """Every device holds every resident edge of ``prop`` (so a join
@@ -161,6 +207,26 @@ class SiteStore:
             return 0, 0
         col = self.prop_dev_rows[:, prop]
         return int(col.sum()), int(col.max(initial=0))
+
+    def prop_window(self, prop: int) -> int:
+        """Static CSR window rows for ``prop``: the max per-device run,
+        rounded up to 8 (min 8).  The ONE sizing formula shared by the
+        per-step table slices, the step-0 seed window, and the
+        planner's edge-gather buffers (``plan_step_comm``), so a
+        gathered table and a local window always agree on shape."""
+        _total, per_dev = self.prop_rows(prop)
+        return int(np.ceil(max(per_dev, 1) / 8) * 8)
+
+    def csr_arrays(self) -> Optional[Tuple[jax.Array, ...]]:
+        """The packed per-property tables as one tuple of device
+        arrays (subject-sorted keys/payload, object-sorted
+        keys/payload, offsets), or ``None`` on a store built without
+        them -- the matcher falls back to per-step masked
+        ``argsort`` tables."""
+        if self.csr_offs is None:
+            return None
+        return (self.csr_sub_s, self.csr_sub_o, self.csr_obj_o,
+                self.csr_obj_s, self.csr_offs)
 
     @staticmethod
     def from_fragmentation(graph: RDFGraph, frag: Fragmentation,
@@ -243,8 +309,8 @@ def plan_step_comm(store: SiteStore, pattern: QueryGraph,
         elif store.prop_shard_complete(prop):
             specs.append(StepComm("skip", prop, 0, total))
         else:
-            cap = int(np.ceil(max(per_dev, 1) / 8) * 8)
-            specs.append(StepComm("dynamic", prop, cap, total))
+            specs.append(StepComm("dynamic", prop, store.prop_window(prop),
+                                  total))
     return tuple(specs)
 
 
@@ -283,9 +349,11 @@ def plan_seed_decimation(store: SiteStore, pattern: QueryGraph) -> bool:
 def _edge_table_for_prop(s: jax.Array, p: jax.Array, o: jax.Array,
                          prop: int) -> Tuple[jax.Array, jax.Array]:
     """(keys, payload) of this property's edges, sorted by subject;
-    non-matching rows pushed to +inf sentinel."""
+    non-matching rows pushed to the +inf sentinel.  Fallback path for
+    stores without CSR-packed tables -- the packed path slices a
+    pre-sorted window instead (see ``SiteStore`` docstring)."""
     sel = p == prop
-    keys = jnp.where(sel, s, jnp.iinfo(jnp.int32).max)
+    keys = jnp.where(sel, s, INT32_SENTINEL)
     order = jnp.argsort(keys)
     return keys[order], o[order]
 
@@ -364,16 +432,28 @@ def _expand_fixed(bind: jax.Array, valid: jax.Array, col_vals: jax.Array,
 
 def _dedup_padded(bind: jax.Array, valid: jax.Array
                   ) -> Tuple[jax.Array, jax.Array]:
-    """Invalidate duplicate rows of a padded binding table (exact:
-    column-wise lexsort + adjacent compare; no hashing).  Rows come back
-    sorted -- row order never matters downstream.  After an all_gather
-    the same partial match can arrive from several devices (replicated
-    fragments); deduping before expansion keeps capacity pressure at the
-    number of *distinct* partial matches."""
+    """Invalidate duplicate rows of a padded binding table (exact -- no
+    lossy hashing; row order never matters downstream).  After an
+    all_gather the same partial match can arrive from several devices
+    (replicated fragments); deduping before expansion keeps capacity
+    pressure at the number of *distinct* partial matches.
+
+    On the kernel path (``REPRO_SPMD_PALLAS`` / TPU default) this runs
+    the open-addressed hash-dedup Pallas kernel -- O(n) inserts with
+    full-row compare on collision, keep mask in place -- replacing the
+    O(n log n) column-wise ``jnp.lexsort``.  Off-TPU (or beyond the
+    kernel's static VMEM budget) the lexsort oracle below is the
+    implementation of record: rows come back sorted there, in place on
+    the kernel path; no caller observes the order."""
     C, V = bind.shape
     if V == 0:
         keep = jnp.zeros_like(valid).at[0].set(valid.any())
         return bind, keep
+    if _use_pallas_probes():
+        from ..kernels.ops import dedup_rows, dedup_rows_supported
+        if dedup_rows_supported(C, V):
+            keep = dedup_rows(bind, valid)
+            return jnp.where(keep[:, None], bind, -1), keep
     keys = tuple(bind[:, v] for v in range(V - 1, -1, -1)) \
         + ((~valid).astype(jnp.int32),)
     order = jnp.lexsort(keys)                  # invalid rows sort last
@@ -435,7 +515,9 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
                  pattern: QueryGraph, capacity: int,
                  axis: Optional[str] = None,
                  comm: Optional[Sequence[StepComm]] = None,
-                 axis_size: int = 1, seed_decimate: bool = False
+                 axis_size: int = 1, seed_decimate: bool = False,
+                 csr: Optional[Tuple[jax.Array, ...]] = None,
+                 prop_windows: Optional[Dict[int, int]] = None
                  ) -> Tuple[jax.Array, jax.Array, List[int], jax.Array,
                             jax.Array, jax.Array]:
     """Match ``pattern`` over one shard's edge table, padded to
@@ -475,15 +557,52 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
     jit-friendly: static pattern, static capacity, static per-step
     specs; overflow (result rows beyond capacity at any step) is
     counted, not silently dropped.
+
+    ``csr`` (the ``SiteStore.csr_arrays()`` tuple, per-device slices)
+    plus ``prop_windows`` (static per-property window rows,
+    ``SiteStore.prop_window``) switch every per-step edge-table build
+    to a ``lax.dynamic_slice`` of the pre-sorted property run -- no
+    per-step ``argsort`` or ``p == prop`` scan in the trace.  With
+    ``csr=None`` the original masked-column builds are used
+    (``local_match`` compatibility path, directly-built stores).
     """
-    from ..kernels.ops import compact_rows
+    from ..kernels.ops import compact_rows, fused_join, \
+        fused_join_supported
     order = _connected_edge_order(pattern)
     edges = pattern.edges
     var_cols: List[int] = []
-    imax = jnp.iinfo(jnp.int32).max
+    imax = INT32_SENTINEL
 
     def col_idx(v: int) -> int:
         return var_cols.index(v)
+
+    n_props = int(csr[4].shape[-1]) - 1 if csr is not None else 0
+
+    def csr_window(prop: int, subject_side: bool,
+                   size: Optional[int] = None, pay_fill: int = -1
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """(keys, payload, live-row count) for one property's packed
+        run: a static-size dynamic_slice window over the pre-sorted
+        CSR arrays, tail masked to the sentinels.  Keys ascend (the
+        run is (s, o)- or (o, s)-sorted), so searchsorted probes and
+        the blocked kernels work on it directly.  ``size`` defaults to
+        the property's static window (``SiteStore.prop_window``, the
+        same formula that sized the planner's gather buffers)."""
+        sub_s_d, sub_o_d, obj_o_d, obj_s_d, offs_d = csr
+        if size is None:
+            size = (prop_windows or {}).get(prop, 8)
+        if not 0 <= prop < n_props:   # never stored: empty static table
+            return (jnp.full((size,), imax, jnp.int32),
+                    jnp.full((size,), pay_fill, jnp.int32), jnp.int32(0))
+        arrk, arrp = ((sub_s_d, sub_o_d) if subject_side
+                      else (obj_o_d, obj_s_d))
+        start = offs_d[prop]
+        n = offs_d[prop + 1] - start
+        wk = jax.lax.dynamic_slice(arrk, (start,), (size,))
+        wp = jax.lax.dynamic_slice(arrp, (start,), (size,))
+        io = jnp.arange(size, dtype=jnp.int32)
+        return (jnp.where(io < n, wk, imax),
+                jnp.where(io < n, wp, pay_fill), n)
 
     bind = jnp.full((capacity, 0), -1, jnp.int32)
     valid = jnp.zeros((capacity,), bool)
@@ -501,14 +620,25 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
         d_known = e.dst >= 0 or e.dst in var_cols
 
         if step == 0:
-            # initialize from the property's local edge list
-            sel = (p == e.prop)
+            # initialize from the property's local edge list.  With CSR
+            # tables the candidate rows are the property's packed run (a
+            # static window, identically (s, o)-ordered on every device
+            # -- the same order the (p, s, o)-sorted fallback scan
+            # yields, so seed decimation stripes identically); without
+            # them, scan the full padded columns.
+            if csr is not None:
+                seed_s, seed_o, n_live = csr_window(e.prop, True)
+                live = jnp.arange(seed_s.shape[0], dtype=jnp.int32) \
+                    < n_live
+            else:
+                seed_s, seed_o, live = s, o, (p == e.prop)
+            sel = live
             if e.src >= 0:
-                sel &= s == e.src
+                sel &= seed_s == e.src
             if e.dst >= 0:
-                sel &= o == e.dst
+                sel &= seed_o == e.dst
             if e.src < 0 and e.src == e.dst:
-                sel &= s == o
+                sel &= seed_s == seed_o
             if seed_decimate and axis is not None:
                 # step 0's property is shard-complete: every device sees
                 # the identical, identically-ordered seed list, so each
@@ -517,8 +647,8 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
                 # blowup of downstream binding counts)
                 rank = jnp.cumsum(sel) - 1
                 sel &= (rank % axis_size) == jax.lax.axis_index(axis)
-            (s_col, o_col), valid = compact_rows(sel, (s, o), capacity,
-                                                 fill=-1)
+            (s_col, o_col), valid = compact_rows(sel, (seed_s, seed_o),
+                                                 capacity, fill=-1)
             ovf = jnp.maximum(
                 ovf, sel.sum().astype(jnp.int32) - capacity)
             cols = []
@@ -544,14 +674,26 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
 
         # -- shared builders for this step (all shapes static) ----------
         def local_pair_tables():
+            if csr is not None:
+                t_s, t_o, _n = csr_window(e.prop, True, pay_fill=imax)
+                return t_s, t_o
             sel_ = p == e.prop
             return jnp.where(sel_, s, imax), jnp.where(sel_, o, imax)
 
         def fresh_prop_tables():
-            # the edge-shipping side: compact this device's rows of the
-            # property, gather every device's buffer (rows this device
-            # lacks arrive from wherever they are resident)
-            (ls, lo_), _ = compact_rows(p == e.prop, (s, o), sc.gather_cap)
+            # the edge-shipping side: this device's packed rows of the
+            # property (CSR window -- or compact from the padded
+            # columns), gathered from every device (rows this device
+            # lacks arrive from wherever they are resident).  The CSR
+            # window and the compact buffer have the identical shape
+            # (sc.gather_cap == SiteStore.prop_window) and content
+            # ((s, o)-ordered rows, imax fill).
+            if csr is not None:
+                ls, lo_, _n = csr_window(e.prop, True, size=sc.gather_cap,
+                                         pay_fill=imax)
+            else:
+                (ls, lo_), _ = compact_rows(p == e.prop, (s, o),
+                                            sc.gather_cap)
             return (jax.lax.all_gather(ls, axis, tiled=True),
                     jax.lax.all_gather(lo_, axis, tiled=True))
 
@@ -663,6 +805,13 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
                         else bt[:, col_idx(known)])
 
             def local_table():
+                # the property's sorted (key -> payload) table: a CSR
+                # window slice when packed tables are available (keys
+                # already sorted, no trace-time argsort), the masked
+                # argsort build otherwise
+                if csr is not None:
+                    keys, payload, _n = csr_window(e.prop, s_known)
+                    return keys, payload
                 if s_known:
                     return _edge_table_for_prop(s, p, o, e.prop)
                 sel_ = p == e.prop
@@ -671,10 +820,23 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
                 return okeys[oorder], s[oorder]
 
             def exp_via_gather(bt, vt):
-                gb, gv, shipped = gathered_bindings(bt, vt)
+                # the fused Pallas kernel runs dedup -> expand -> filter
+                # in one VMEM pass over the raw gathered table; the
+                # composition below (exact-dedup then _expand_fixed) is
+                # both the off-TPU path and the semantics of record
+                gb = jax.lax.all_gather(bt, axis, tiled=True)
+                gv = jax.lax.all_gather(vt, axis, tiled=True)
+                shipped = gv.sum().astype(jnp.int32)
                 keys, payload = local_table()
-                nb, nc, nv, over = _expand_fixed(
-                    gb, gv, probe_vals(gb), keys, payload, capacity)
+                if _use_pallas_probes() and fused_join_supported(
+                        gb.shape[0], gb.shape[1], keys.shape[0],
+                        capacity):
+                    nb, nc, nv, over = fused_join(
+                        gb, gv, probe_vals(gb), keys, payload, capacity)
+                else:
+                    gb, gv = _dedup_padded(gb, gv)
+                    nb, nc, nv, over = _expand_fixed(
+                        gb, gv, probe_vals(gb), keys, payload, capacity)
                 return nb, nc, nv, over, shipped
 
             def exp_via_gather_c(bt, vt):
@@ -753,11 +915,20 @@ def compat_shard_map(fn, mesh, in_specs, out_specs):
 def make_spmd_matcher(mesh: Mesh, axis: str, pattern: QueryGraph,
                       capacity: int,
                       comm: Optional[Sequence[StepComm]] = None,
-                      seed_decimate: bool = False):
+                      seed_decimate: bool = False,
+                      use_csr: bool = False,
+                      prop_windows: Optional[Dict[int, int]] = None):
     """Build a jitted SPMD function: site-sharded (s,p,o) -> gathered
     binding tables (num_sites * capacity, V), validity mask, the
     per-device overflow row count (num_sites,), and the planner's
     per-join-step decision / shipped-row vectors (replicated).
+
+    With ``use_csr=True`` the function takes the five
+    ``SiteStore.csr_arrays()`` tables as additional sharded arguments
+    (call ``fn(store.s, store.p, store.o, *store.csr_arrays())``) and
+    ``prop_windows`` must carry the static per-property window sizes
+    (``SiteStore.prop_window``); the match loop then slices pre-sorted
+    property runs instead of rebuilding tables per step.
 
     Every join step inside ``_match_shard`` broadcast-joins with the
     shipping mode chosen by ``comm`` (see ``plan_step_comm``; ``None``
@@ -779,29 +950,44 @@ def make_spmd_matcher(mesh: Mesh, axis: str, pattern: QueryGraph,
     # fast path; the mesh size is static at trace time.
     m = int(np.prod(mesh.devices.shape))
     step_axis = axis if m > 1 else None
+    n_in = 8 if use_csr else 3
 
-    def per_site(s, p, o):
+    def per_site(*arrs):
+        s, p, o = (a[0] for a in arrs[:3])
+        csr = tuple(a[0] for a in arrs[3:]) if use_csr else None
         bind, valid, cols, ovf, dec, rows = _match_shard(
-            s[0], p[0], o[0], pattern, capacity, axis=step_axis, comm=comm,
-            axis_size=m, seed_decimate=seed_decimate)
+            s, p, o, pattern, capacity, axis=step_axis, comm=comm,
+            axis_size=m, seed_decimate=seed_decimate, csr=csr,
+            prop_windows=prop_windows)
         g_bind = jax.lax.all_gather(bind, axis, tiled=True)
         g_valid = jax.lax.all_gather(valid, axis, tiled=True)
         g_ovf = jax.lax.all_gather(ovf[None], axis, tiled=True)
         return g_bind, g_valid, g_ovf, dec, rows
 
-    fn = compat_shard_map(per_site, mesh,
-                          (P(axis, None), P(axis, None), P(axis, None)),
+    fn = compat_shard_map(per_site, mesh, (P(axis, None),) * n_in,
                           (P(), P(), P(), P(), P()))
     return jax.jit(fn)
+
+
+def _matcher_args(store: SiteStore, use_csr: bool) -> Tuple[jax.Array, ...]:
+    """The device arrays a matcher built with ``use_csr`` expects."""
+    args: Tuple[jax.Array, ...] = (store.s, store.p, store.o)
+    if use_csr:
+        args += store.csr_arrays()
+    return args
 
 
 def spmd_match(store: SiteStore, mesh: Mesh, axis: str,
                pattern: QueryGraph, capacity: int = 4096
                ) -> Tuple[np.ndarray, List[int]]:
     """Run the SPMD matcher and return deduped host-side bindings."""
-    fn = make_spmd_matcher(mesh, axis, pattern, capacity)
+    use_csr = store.csr_arrays() is not None
+    windows = ({e.prop: store.prop_window(e.prop) for e in pattern.edges}
+               if use_csr else None)
+    fn = make_spmd_matcher(mesh, axis, pattern, capacity, use_csr=use_csr,
+                           prop_windows=windows)
     bind, valid, _ovf, _dec, _rows = jax.device_get(
-        fn(store.s, store.p, store.o))
+        fn(*_matcher_args(store, use_csr)))
     cols = pattern_var_order(pattern)
     rows = bind[np.asarray(valid)]
     if rows.size:
@@ -975,10 +1161,14 @@ class SpmdEngine(EngineBase):
         key = (pattern.edges, capacity)
         fn = self._matchers.get(key)
         if fn is None:
+            use_csr = self.store.csr_arrays() is not None
+            windows = ({e.prop: self.store.prop_window(e.prop)
+                        for e in pattern.edges} if use_csr else None)
             fn = make_spmd_matcher(self.mesh, self.axis, pattern, capacity,
                                    comm=self._comm_spec(pattern),
                                    seed_decimate=self._seed_decimation(
-                                       pattern))
+                                       pattern),
+                                   use_csr=use_csr, prop_windows=windows)
             self._matchers[key] = fn
             self._compiles += 1
         return fn
@@ -999,8 +1189,9 @@ class SpmdEngine(EngineBase):
         while True:
             caps.append(cap)
             fn = self._matcher(norm, cap)
+            use_csr = self.store.csr_arrays() is not None
             bind, valid, ovf, dec, rows = jax.device_get(
-                fn(self.store.s, self.store.p, self.store.o))
+                fn(*_matcher_args(self.store, use_csr)))
             attempts.append((np.asarray(dec), np.asarray(rows),
                              int(np.asarray(valid).sum())))
             if int(np.max(np.asarray(ovf), initial=0)) <= 0:
@@ -1199,4 +1390,7 @@ class SpmdEngine(EngineBase):
         return {"compiled_shapes": float(self._compiles),
                 "devices": float(self.store.num_sites),
                 "comm_planner": float(self.comm_plan),
-                "replicated_props": float(len(self.replicated_props))}
+                "replicated_props": float(len(self.replicated_props)),
+                "pallas_join_kernels": float(_use_pallas_probes()),
+                "csr_prop_tables": float(
+                    self.store.csr_arrays() is not None)}

@@ -4,13 +4,17 @@ Kernels (each: <name>.py kernel body, ops.py jit wrapper, ref.py oracle):
   semijoin        -- blocked sort-merge membership probe (match hot loop)
   semijoin(count) -- join multiplicity counting (expansion offsets)
   pair_semijoin   -- (s, o) pair membership (SPMD cycle-close probe)
+  dedup_rows      -- hash-based binding-row dedup (broadcast-join step)
+  fused_join      -- fused dedup->expand->filter join (SPMD gather step)
   flash_attention -- causal/SWA/GQA blocked attention (LM stack)
 
 Validated on CPU via interpret=True; compiled natively on TPU.
 """
-from .ops import (attention, compact_rows, join_count, pair_semijoin,
-                  semijoin)
+from .ops import (attention, compact_rows, dedup_rows,
+                  dedup_rows_supported, fused_join, fused_join_supported,
+                  join_count, pair_semijoin, semijoin)
 from . import ref
 
-__all__ = ["attention", "compact_rows", "join_count", "pair_semijoin",
-           "semijoin", "ref"]
+__all__ = ["attention", "compact_rows", "dedup_rows",
+           "dedup_rows_supported", "fused_join", "fused_join_supported",
+           "join_count", "pair_semijoin", "semijoin", "ref"]

@@ -14,10 +14,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
+from ..constants import INT32_SENTINEL, MAX_VERTEX_ID  # noqa: F401
 from .flash_attention import flash_attention
-from .semijoin import BM, BN, pair_semijoin_blocks, semijoin_blocks
+from .semijoin import (BM, BN, dedup_blocks, fused_join_blocks,
+                       pair_semijoin_blocks, semijoin_blocks)
 
-INT32_MAX = np.iinfo(np.int32).max
+#: the shared pad/fill sentinel (see ``repro.constants``): sorts last,
+#: never equals a real vertex id (ids are bounded by ``MAX_VERTEX_ID``,
+#: enforced at ``RDFGraph`` construction).
+INT32_MAX = INT32_SENTINEL
+
+#: VMEM working-set budget for the single-pass dedup / fused-join
+#: kernels (whole binding table + hash slots + outputs resident at
+#: once).  Half the ~16 MB per-core budget leaves room for double
+#: buffering; bigger shapes fall back to the jnp oracles.
+KERNEL_VMEM_BUDGET = 8 * 1024 * 1024
 
 
 def _on_tpu() -> bool:
@@ -185,6 +196,80 @@ def pair_semijoin(q_s: jax.Array, q_o: jax.Array,
     mask_sorted = got.reshape(-1)[:nq] > 0
     inv = jnp.zeros_like(qorder).at[qorder].set(jnp.arange(nq))
     return mask_sorted[inv]
+
+
+# ----------------------------------------------------------------------
+# Hash dedup / fused dedup->expand->filter join
+# ----------------------------------------------------------------------
+
+def _hash_size(C: int) -> int:
+    """Power-of-two open-addressing table size >= 2C (load factor
+    <= 0.5, so probing terminates fast and an empty slot always
+    exists)."""
+    H = 8
+    while H < 2 * C:
+        H *= 2
+    return H
+
+
+def dedup_rows_supported(C: int, V: int) -> bool:
+    """Static guard: does the hash-dedup kernel's working set (binding
+    table + hash slots + keep mask, all int32) fit the VMEM budget?
+    V == 0 tables carry no values to compare and stay on the oracle."""
+    if V <= 0 or C <= 0:
+        return False
+    return (C * (V + 2) + _hash_size(C)) * 4 <= KERNEL_VMEM_BUDGET
+
+
+def fused_join_supported(C: int, V: int, T: int, capacity: int) -> bool:
+    """Static guard for the fused join kernel: dedup working set plus
+    the edge table (keys + payload) and the capacity-row outputs."""
+    if not dedup_rows_supported(C, V):
+        return False
+    working = (C * (V + 3) + _hash_size(C) + 2 * T
+               + capacity * (V + 2))
+    return working * 4 <= KERNEL_VMEM_BUDGET
+
+
+def dedup_rows(bind: jax.Array, valid: jax.Array,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """First-occurrence keep mask over the valid rows of a padded
+    binding table: ``keep[i]`` is True iff ``valid[i]`` and no earlier
+    valid row equals row ``i``.  Exact (open-addressed int32 hash with
+    full-row compare on collision) and in place -- unlike the lexsort
+    oracle it never reorders rows, which no caller depends on anyway.
+    Callers must check ``dedup_rows_supported`` first."""
+    C, V = bind.shape
+    keep = dedup_blocks(bind.astype(jnp.int32),
+                        valid.astype(jnp.int32).reshape(1, C),
+                        _hash_size(C),
+                        interpret=_interpret_default(interpret))
+    return keep[0] > 0
+
+
+def fused_join(bind: jax.Array, valid: jax.Array, probe: jax.Array,
+               keys_sorted: jax.Array, payload: jax.Array, capacity: int,
+               interpret: Optional[bool] = None
+               ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused ``dedup_rows`` + join-expand against a sorted (keys ->
+    payload) edge table, one kernel pass (the SPMD gather step without
+    materializing the deduped table).  Same contract as
+    ``core.spmd._expand_fixed`` composed after a dedup: returns
+    (new_bind (capacity, V), new_col, new_valid, overflow) where
+    overflow counts result rows that did not fit (identical to the
+    composition's count, including the int32 cumsum wrap-risk guard);
+    output row *placement* differs (original gathered order, not
+    lexsorted), which no caller observes.  Callers must check
+    ``fused_join_supported`` first."""
+    C, V = bind.shape
+    nb, nc, nv, over = fused_join_blocks(
+        bind.astype(jnp.int32), valid.astype(jnp.int32).reshape(1, C),
+        probe.astype(jnp.int32).reshape(1, C),
+        keys_sorted.astype(jnp.int32).reshape(1, -1),
+        payload.astype(jnp.int32).reshape(1, -1),
+        capacity, _hash_size(C),
+        interpret=_interpret_default(interpret))
+    return nb, nc[0], nv[0] > 0, over[0, 0]
 
 
 # ----------------------------------------------------------------------

@@ -65,6 +65,32 @@ def pair_semijoin_ref(q_s: jax.Array, q_o: jax.Array,
 
 
 # ----------------------------------------------------------------------
+# Binding-row dedup (first-occurrence keep mask over a padded table)
+# ----------------------------------------------------------------------
+
+def dedup_rows_ref(bind: jax.Array, valid: jax.Array) -> jax.Array:
+    """keep[i] = valid[i] and no earlier valid row j < i has
+    bind[j] == bind[i] (all columns).  The semantics of record for the
+    hash-dedup kernel: exact, first occurrence by original index, keep
+    mask returned in original row positions.
+
+    Implemented as a stable column-wise lexsort (valid rows first,
+    ties preserve original order, so the first of each duplicate run is
+    the earliest index) + adjacent compare + scatter back."""
+    C, V = bind.shape
+    if V == 0:
+        return jnp.zeros((C,), bool).at[0].set(valid.any())
+    keys = tuple(bind[:, v] for v in range(V - 1, -1, -1)) \
+        + ((~valid).astype(jnp.int32),)
+    order = jnp.lexsort(keys)                # stable; invalid rows last
+    bs, vs = bind[order], valid[order]
+    dup = jnp.zeros((C,), bool).at[1:].set(
+        jnp.all(bs[1:] == bs[:-1], axis=1) & vs[1:] & vs[:-1])
+    keep_sorted = vs & ~dup
+    return jnp.zeros((C,), bool).at[order].set(keep_sorted)
+
+
+# ----------------------------------------------------------------------
 # Flash attention (causal, optional sliding window, GQA)
 # ----------------------------------------------------------------------
 

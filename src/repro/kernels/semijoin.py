@@ -28,6 +28,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..constants import INT32_SENTINEL
+
 BM = 512   # query block (lane-aligned: 4 * 128)
 BN = 512   # table block
 
@@ -153,6 +155,200 @@ def semijoin_blocks(queries_2d: jax.Array, table_2d: jax.Array,
         out_shape=jax.ShapeDtypeStruct((nqb, bm), jnp.int32),
         interpret=interpret,
     )(first_blk, widths, queries_2d, table_2d)
+
+
+# ----------------------------------------------------------------------
+# Hash-based binding-row dedup + the fused dedup->expand->filter join
+# ----------------------------------------------------------------------
+#
+# Both kernels run as a single VMEM-resident program (no outer grid):
+# binding tables are small fixed-capacity buffers (C = devices *
+# capacity rows, V <= a handful of int32 columns), so the whole working
+# set -- table, hash slots, outputs -- fits comfortably inside the
+# ~16 MB VMEM budget for every shape the SPMD engine traces.  The
+# wrappers in ``ops.py`` enforce that with a static byte guard
+# (``dedup_rows_supported`` / ``fused_join_supported``) and the caller
+# falls back to the lexsort/jnp oracles beyond it.
+
+
+def _row_hashes(bind, valid, H: int):
+    """Per-row open-addressing start slots: a multiplicative xor-mix
+    over the int32 columns, avalanched, masked to the power-of-two
+    table size ``H``.  Collisions are fine (resolved by full-row
+    compare); invalid rows never probe."""
+    C, V = bind.shape
+    h = jnp.full((C,), 0x811C9DC5, jnp.uint32)
+    for v in range(V):                       # static unroll: V is tiny
+        h = (h ^ bind[:, v].astype(jnp.uint32)) * jnp.uint32(0x9E3779B1)
+        h = h ^ (h >> 15)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    slots = (h & jnp.uint32(H - 1)).astype(jnp.int32)
+    return jnp.where(valid, slots, 0)
+
+
+def _hash_dedup_rows(bind, valid, table_ref, keep_ref, H: int):
+    """Serial open-addressed insert of every valid row; writes the
+    first-occurrence keep mask (int32 0/1, original row positions) into
+    ``keep_ref`` (1, C).  ``table_ref`` (1, H) holds row-index+1 (0 =
+    empty).  Exact: equal start slots fall through to a full-row
+    compare, so hash collisions can never merge distinct rows."""
+    C, V = bind.shape
+    table_ref[...] = jnp.zeros_like(table_ref)
+    keep_ref[...] = jnp.zeros_like(keep_ref)
+    slot0 = _row_hashes(bind, valid, H)
+
+    def insert(i, _):
+        row_i = jax.lax.dynamic_slice(bind, (i, 0), (1, V))[0]
+
+        # probe until an empty slot (-> first occurrence, insert) or an
+        # occupied slot whose row equals ours (-> duplicate).  At most C
+        # rows ever insert and H >= 2C, so an empty slot always exists.
+        def probing(carry):
+            return carry[1] == 0
+
+        def probe(carry):
+            slot, _ = carry
+            occ = pl.load(table_ref,
+                          (slice(0, 1), pl.dslice(slot, 1)))[0, 0]
+            empty = occ == 0
+            other = jax.lax.dynamic_slice(
+                bind, (jnp.maximum(occ - 1, 0), 0), (1, V))[0]
+            same = jnp.logical_and(~empty, jnp.all(other == row_i))
+            verdict = jnp.where(empty, 1, jnp.where(same, 2, 0))
+            nxt = jnp.where(verdict == 0, (slot + 1) & (H - 1), slot)
+            return nxt, verdict
+
+        # invalid rows skip probing entirely (verdict pre-set to "dup")
+        start = (slot0[i], jnp.where(valid[i], 0, 2))
+        slot, verdict = jax.lax.while_loop(probing, probe, start)
+
+        @pl.when(verdict == 1)
+        def _first_occurrence():
+            pl.store(table_ref, (slice(0, 1), pl.dslice(slot, 1)),
+                     jnp.full((1, 1), i + 1, jnp.int32))
+            pl.store(keep_ref, (slice(0, 1), pl.dslice(i, 1)),
+                     jnp.ones((1, 1), jnp.int32))
+
+        return 0
+
+    jax.lax.fori_loop(0, C, insert, 0)
+
+
+def _dedup_kernel(bind_ref, valid_ref, keep_ref, table_ref, *, H: int):
+    bind = bind_ref[...]
+    valid = valid_ref[0, :] != 0
+    _hash_dedup_rows(bind, valid, table_ref, keep_ref, H)
+
+
+def _bsearch(keys, x, right: bool):
+    """Vectorized branchless binary search: insertion point of each
+    ``x`` in ascending ``keys`` (searchsorted left/right), written out
+    as a fixed-trip loop so it lowers inside a kernel body."""
+    T = keys.shape[0]
+    lo = jnp.zeros(x.shape, jnp.int32)
+    sz = jnp.full(x.shape, T, jnp.int32)
+
+    def step(_, carry):
+        lo, sz = carry
+        half = sz // 2
+        mid = jnp.minimum(lo + half, T - 1)
+        vals = jnp.take(keys, mid)
+        go = (vals <= x) if right else (vals < x)
+        live = sz > 0
+        go = go & live
+        lo = jnp.where(go, mid + 1, lo)
+        sz = jnp.where(live, jnp.where(go, sz - half - 1, half), 0)
+        return lo, sz
+
+    lo, _ = jax.lax.fori_loop(0, max(T.bit_length() + 1, 1), step,
+                              (lo, sz))
+    return lo
+
+
+def _fused_join_kernel(bind_ref, valid_ref, probe_ref, keys_ref, pay_ref,
+                       out_bind_ref, out_col_ref, out_valid_ref, over_ref,
+                       table_ref, keep_ref, *, H: int, capacity: int):
+    """dedup -> expand -> filter in one VMEM pass.
+
+    Replaces the ``_dedup_padded`` + ``_expand_fixed`` composition of
+    the SPMD gather step without materializing the deduped table:
+    duplicate gathered rows are invalidated in place (hash dedup,
+    original row order -- order never matters downstream), the
+    surviving rows binary-search the sorted edge-key column for their
+    join ranges, and the cumsum'd inverse map scatters the expansion
+    into the fixed-capacity output.  Overflow semantics are exactly
+    ``_expand_fixed``'s, including the conservative int32 cumsum
+    wrap-risk guard -- the retry ladder must see identical overflow
+    counts whichever path traced."""
+    bind = bind_ref[...]                     # (C, V)
+    valid = valid_ref[0, :] != 0             # (C,)
+    probe = probe_ref[0, :]                  # (C,)
+    keys = keys_ref[0, :]                    # (T,)
+    pay = pay_ref[0, :]                      # (T,)
+    C, V = bind.shape
+    T = keys.shape[0]
+
+    _hash_dedup_rows(bind, valid, table_ref, keep_ref, H)
+    keep = keep_ref[0, :] != 0
+
+    probe_m = jnp.where(keep, probe, INT32_SENTINEL)
+    lo = _bsearch(keys, probe_m, right=False)
+    hi = _bsearch(keys, probe_m, right=True)
+    cnt = jnp.where(keep, hi - lo, 0).astype(jnp.int32)
+
+    # identical wrap-risk guard to _expand_fixed (int32 cumsum can wrap
+    # past 2^31 total expansion rows; treat as conservative overflow)
+    wrap_risk = jnp.max(cnt, initial=0) > (2 ** 31 - 1) // max(C, 1)
+    start = jnp.cumsum(cnt) - cnt
+    total = start[C - 1] + cnt[C - 1]
+
+    t = jax.lax.broadcasted_iota(jnp.int32, (capacity, 1), 0)[:, 0]
+    r = _bsearch(start, t, right=True) - 1
+    r = jnp.clip(r, 0, C - 1)
+    k = t - jnp.take(start, r)
+    ok = (t < total) & (k < jnp.take(cnt, r))
+    src = jnp.clip(jnp.take(lo, r) + k, 0, T - 1)
+
+    out_col_ref[0, :] = jnp.where(ok, jnp.take(pay, src), -1)
+    out_bind_ref[...] = jnp.where(ok[:, None], jnp.take(bind, r, axis=0),
+                                  -1)
+    out_valid_ref[0, :] = ok.astype(jnp.int32)
+    over = jnp.maximum(total - capacity, 0).astype(jnp.int32)
+    over_ref[0, 0] = jnp.where(wrap_risk, jnp.int32(capacity + 1), over)
+
+
+def dedup_blocks(bind: jax.Array, valid_i32: jax.Array, H: int,
+                 interpret: bool = True) -> jax.Array:
+    """Run the hash-dedup kernel.  bind (C, V) int32, valid (1, C)
+    int32; returns the (1, C) int32 first-occurrence keep mask."""
+    C, V = bind.shape
+    return pl.pallas_call(
+        functools.partial(_dedup_kernel, H=H),
+        out_shape=jax.ShapeDtypeStruct((1, C), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, H), jnp.int32)],
+        interpret=interpret,
+    )(bind, valid_i32)
+
+
+def fused_join_blocks(bind: jax.Array, valid_i32: jax.Array,
+                      probe: jax.Array, keys: jax.Array, pay: jax.Array,
+                      capacity: int, H: int, interpret: bool = True):
+    """Run the fused dedup->expand->filter kernel.  Returns
+    (new_bind (capacity, V) int32, new_col (1, capacity) int32,
+    new_valid (1, capacity) int32, overflow (1, 1) int32)."""
+    C, V = bind.shape
+    return pl.pallas_call(
+        functools.partial(_fused_join_kernel, H=H, capacity=capacity),
+        out_shape=(jax.ShapeDtypeStruct((capacity, V), jnp.int32),
+                   jax.ShapeDtypeStruct((1, capacity), jnp.int32),
+                   jax.ShapeDtypeStruct((1, capacity), jnp.int32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)),
+        scratch_shapes=[pltpu.VMEM((1, H), jnp.int32),
+                        pltpu.VMEM((1, C), jnp.int32)],
+        interpret=interpret,
+    )(bind, valid_i32, probe, keys, pay)
 
 
 def pair_semijoin_blocks(qs_2d: jax.Array, qo_2d: jax.Array,

@@ -32,6 +32,7 @@ def test_smoke_forward(arch_id):
 
 
 @pytest.mark.parametrize("arch_id", ALL_ARCH_IDS)
+@pytest.mark.slow
 def test_smoke_train_step(arch_id):
     spec = get_arch(arch_id)
     cfg = spec.smoke
@@ -101,6 +102,7 @@ def test_input_specs_all_shapes(arch_id):
 
 @pytest.mark.parametrize("arch_id", ["qwen3-1.7b", "mixtral-8x7b",
                                      "rwkv6-1.6b"])
+@pytest.mark.slow
 def test_decode_matches_full_forward(arch_id):
     """Step-by-step decode logits == full-sequence forward logits."""
     cfg = get_arch(arch_id).smoke

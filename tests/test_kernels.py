@@ -199,3 +199,155 @@ def test_attention_kernel_matches_inside_jit():
         np.asarray(f(q, k, v)),
         np.asarray(ref.attention_ref(q, k, v, causal=True)),
         atol=2e-5, rtol=2e-5)
+
+
+# ----------------------------------------------------------------------
+# Hash-dedup kernel vs the lexsort oracle (semantics of record), and
+# the fused dedup->expand->filter join kernel vs the oracle
+# composition used by core.spmd off-TPU.  Adversarial inputs: padded
+# all-sentinel blocks, duplicate-heavy tables, capacity overflow, and
+# empty (all-sentinel) property tables.
+# ----------------------------------------------------------------------
+
+from repro.kernels import (dedup_rows, dedup_rows_supported,  # noqa: E402
+                           fused_join, fused_join_supported)
+
+
+def _bind_case(C, V, style, seed):
+    rng = np.random.default_rng(seed)
+    if style == "dup_heavy":
+        bind = rng.integers(0, 3, (C, V)).astype(np.int32)
+        valid = rng.random(C) < 0.9
+    elif style == "all_sentinel":
+        bind = np.full((C, V), -1, np.int32)
+        valid = np.zeros(C, bool)
+    elif style == "all_valid_distinct":
+        bind = np.arange(C * V, dtype=np.int32).reshape(C, V)
+        valid = np.ones(C, bool)
+    else:                                   # random with padding holes
+        bind = rng.integers(0, 40, (C, V)).astype(np.int32)
+        valid = rng.random(C) < 0.7
+        bind[~valid] = -1
+    return bind, valid
+
+
+def _first_occurrence_keep(bind, valid):
+    """Brute-force first-occurrence-by-original-index keep mask."""
+    seen, keep = set(), np.zeros(len(valid), bool)
+    for i in range(len(valid)):
+        key = tuple(bind[i].tolist())
+        if valid[i] and key not in seen:
+            seen.add(key)
+            keep[i] = True
+    return keep
+
+
+@pytest.mark.parametrize("C,V", [(8, 1), (64, 3), (256, 2), (128, 5),
+                                 (512, 4)])
+@pytest.mark.parametrize("style", ["random", "dup_heavy", "all_sentinel",
+                                   "all_valid_distinct"])
+def test_dedup_rows_matches_oracle(C, V, style):
+    bind, valid = _bind_case(C, V, style, seed=C * 31 + V)
+    assert dedup_rows_supported(C, V)
+    got = np.asarray(dedup_rows(jnp.asarray(bind), jnp.asarray(valid)))
+    # the lexsort oracle keeps one row per distinct value set ...
+    want_ref = np.asarray(ref.dedup_rows_ref(jnp.asarray(bind),
+                                             jnp.asarray(valid)))
+    # ... and the kernel's contract pins *which* one: the earliest index
+    want_brute = _first_occurrence_keep(bind, valid)
+    np.testing.assert_array_equal(got, want_brute)
+    assert got.sum() == want_ref.sum()
+    np.testing.assert_array_equal(
+        np.sort(bind[got], axis=0), np.sort(bind[want_ref], axis=0))
+
+
+def _edge_table(T, n_real, key_range, seed):
+    """Sorted keys padded with the INT32_MAX sentinel + payload."""
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.integers(0, key_range, n_real).astype(np.int32))
+    keys = np.concatenate([keys, np.full(T - n_real, INT32_MAX, np.int32)])
+    payload = np.concatenate([rng.integers(0, 99, n_real).astype(np.int32),
+                              np.full(T - n_real, -1, np.int32)])
+    return keys, payload
+
+
+def _oracle_join(bind, valid, probe, keys, payload, capacity, monkeypatch):
+    """The off-TPU composition of record: lexsort dedup + _expand_fixed
+    (REPRO_SPMD_PALLAS pinned to 0 so CI kernel runs still diff against
+    the jnp oracle)."""
+    from repro.core import spmd as S
+    monkeypatch.setenv("REPRO_SPMD_PALLAS", "0")
+    db, dv = S._dedup_padded(jnp.asarray(bind), jnp.asarray(valid))
+    # rebuild per-row probes exactly like exp_via_gather: column lookup
+    # on the (possibly reordered) deduped table
+    dprobe = np.asarray(db)[:, _PROBE_COL]
+    return S._expand_fixed(db, dv, jnp.asarray(dprobe),
+                           jnp.asarray(keys), jnp.asarray(payload), capacity)
+
+
+_PROBE_COL = 0        # probe on the first binding column throughout
+
+
+def _row_multiset(nb, nc, nv):
+    nb, nc, nv = np.asarray(nb), np.asarray(nc), np.asarray(nv)
+    rows = [tuple(nb[i].tolist()) + (int(nc[i]),)
+            for i in range(len(nv)) if nv[i]]
+    out = {}
+    for r in rows:
+        out[r] = out.get(r, 0) + 1
+    return out
+
+
+@pytest.mark.parametrize("C,V,T,capacity", [
+    (64, 2, 64, 256),        # comfortable fit
+    (128, 3, 32, 512),       # duplicate-heavy probes
+    (64, 2, 8, 256),         # tiny table
+    (256, 4, 128, 1024),
+])
+@pytest.mark.parametrize("style", ["random", "dup_heavy", "all_sentinel"])
+def test_fused_join_matches_oracle_composition(C, V, T, capacity, style,
+                                               monkeypatch):
+    bind, valid = _bind_case(C, V, style, seed=C + T)
+    keys, payload = _edge_table(T, max(T // 2, 1), 40, seed=C * T)
+    probe = bind[:, _PROBE_COL]
+    assert fused_join_supported(C, V, T, capacity)
+    got = fused_join(jnp.asarray(bind), jnp.asarray(valid),
+                     jnp.asarray(probe), jnp.asarray(keys),
+                     jnp.asarray(payload), capacity)
+    want = _oracle_join(bind, valid, probe, keys, payload, capacity,
+                        monkeypatch)
+    assert int(got[3]) == int(want[3]), "overflow counts diverged"
+    assert int(got[3]) == 0
+    assert _row_multiset(*got[:3]) == _row_multiset(*want[:3])
+
+
+def test_fused_join_empty_property_table(monkeypatch):
+    """An empty property on this shard: every key is the sentinel, so
+    the join yields zero rows and zero overflow."""
+    bind, valid = _bind_case(64, 2, "random", seed=9)
+    keys = np.full(16, INT32_MAX, np.int32)
+    payload = np.full(16, -1, np.int32)
+    got = fused_join(jnp.asarray(bind), jnp.asarray(valid),
+                     jnp.asarray(bind[:, 0]), jnp.asarray(keys),
+                     jnp.asarray(payload), 128)
+    assert int(got[3]) == 0 and not bool(np.asarray(got[2]).any())
+    want = _oracle_join(bind, valid, bind[:, 0], keys, payload, 128,
+                        monkeypatch)
+    assert int(want[3]) == 0 and not bool(np.asarray(want[2]).any())
+
+
+@pytest.mark.parametrize("capacity", [1, 4, 16])
+def test_fused_join_overflow_counts_match_composition(capacity,
+                                                      monkeypatch):
+    """Under capacity overflow the retry ladder only consumes the
+    overflow *count*; fused kernel and oracle composition must agree on
+    it exactly (truncated content is discarded either way)."""
+    bind, valid = _bind_case(128, 2, "dup_heavy", seed=3)
+    keys, payload = _edge_table(64, 64, 3, seed=4)   # dense key collisions
+    probe = bind[:, _PROBE_COL]
+    got = fused_join(jnp.asarray(bind), jnp.asarray(valid),
+                     jnp.asarray(probe), jnp.asarray(keys),
+                     jnp.asarray(payload), capacity)
+    want = _oracle_join(bind, valid, probe, keys, payload, capacity,
+                        monkeypatch)
+    assert int(got[3]) == int(want[3]) > 0

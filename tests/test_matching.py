@@ -100,3 +100,38 @@ def test_truncation_flag():
     pat = QueryGraph.make([(V(0), V(1), 0)])  # 'type' edges
     res = match_pattern(g, pat, max_rows=3)
     assert res.truncated and res.num_rows == 3
+
+
+# ----------------------------------------------------------------------
+# Sentinel-safety guard: the id-space bound shared with the SPMD /
+# kernel layers (repro.constants).  Ids at the 2^21-1 bound stay far
+# below the INT32_SENTINEL padding value and the int32 hash mixing, so
+# they must construct and match; anything past the bound (or negative)
+# must be rejected at RDFGraph construction, not corrupt a join later.
+# ----------------------------------------------------------------------
+
+def test_ids_just_under_bound_construct_and_match():
+    from repro.constants import MAX_VERTEX_ID
+    hi = MAX_VERTEX_ID                      # == 2**21 - 1
+    s = np.array([hi - 1, hi], np.int32)
+    p = np.zeros(2, np.int32)
+    o = np.array([hi, hi - 1], np.int32)
+    g = RDFGraph(s, p, o, hi + 1, 1)
+    res = match_pattern(g, QueryGraph.make([(V(0), V(1), 0)]))
+    got = {(int(res.columns[V(0)][i]), int(res.columns[V(1)][i]))
+           for i in range(res.num_rows)}
+    assert got == {(hi - 1, hi), (hi, hi - 1)}
+
+
+@pytest.mark.parametrize("field", ["s", "o", "p"])
+def test_ids_past_bound_raise_value_error(field):
+    from repro.constants import MAX_PROPERTY_ID, MAX_VERTEX_ID
+    cols = {"s": np.zeros(2, np.int32), "p": np.zeros(2, np.int32),
+            "o": np.zeros(2, np.int32)}
+    bound = MAX_PROPERTY_ID if field == "p" else MAX_VERTEX_ID
+    cols[field] = np.array([0, bound + 1], np.int32)
+    with pytest.raises(ValueError, match=field):
+        RDFGraph(cols["s"], cols["p"], cols["o"], 4, 2)
+    cols[field] = np.array([0, -1], np.int32)
+    with pytest.raises(ValueError, match=field):
+        RDFGraph(cols["s"], cols["p"], cols["o"], 4, 2)

@@ -55,6 +55,7 @@ def _counters(sess):
     return {k: extra[k] for k in DECISION_COUNTERS.values()}
 
 
+@pytest.mark.slow
 def test_spmd_trace_reconciles_with_ledger(spmd_setup):
     g, plan = spmd_setup
     tracer = Tracer(enabled=True, capacity=256)
@@ -99,6 +100,7 @@ def test_spmd_trace_reconciles_with_ledger(spmd_setup):
     assert total_traced == sess.stats().comm_bytes
 
 
+@pytest.mark.slow
 def test_spmd_trace_covers_retry_tiers(spmd_setup):
     """A query forced through the overflow retry ladder traces every
     attempted tier, and the bytes of *all* tiers are ledgered."""
@@ -132,6 +134,7 @@ def test_spmd_disabled_tracer_records_nothing(spmd_setup):
     assert sess.stats().queries == 1
 
 
+@pytest.mark.slow
 def test_spmd_ledger_identical_traced_vs_untraced(spmd_setup):
     """Enabling tracing must not change results or the ledger (tracing
     is host-side only; nothing new is traced inside shard_map)."""

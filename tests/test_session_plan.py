@@ -130,6 +130,7 @@ def test_local_vs_spmd_binding_multisets(tiny, vplan, sample):
         assert tl == ts
 
 
+@pytest.mark.slow
 def test_execute_many_matches_sequential_execute(tiny, vplan, sample):
     qs, _ = sample
     for backend in BACKENDS:

@@ -196,6 +196,7 @@ def test_planner_decision_vector_matches_counters(skew_graph):
 # Ledger: planned <= naive on the star/chain/cycle workload
 # ----------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_planned_ledger_never_exceeds_naive(skew_graph):
     """Planned <= naive on this (seeded, deterministic) star/chain/
     cycle workload.  NOTE this is a workload-level empirical property,

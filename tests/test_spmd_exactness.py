@@ -120,6 +120,24 @@ def test_pallas_probe_path_is_exact_end_to_end(rgraph, monkeypatch):
     assert eng.execute(q).num_rows == want
 
 
+@pytest.mark.parametrize("pallas", ["0", "1"], ids=["oracle", "kernel"])
+def test_join_kernel_toggle_answer_sets_identical(rgraph, rqueries,
+                                                  monkeypatch, pallas):
+    """The fused dedup->expand->filter join kernel and the hash-dedup
+    kernel (REPRO_SPMD_PALLAS=1, interpret mode on CPU) produce answer
+    sets identical to the lexsort/jnp oracle path (=0) -- end to end
+    through the engine, star/chain/cycle shapes, forcing at least one
+    overflow retry tier with a small starting capacity."""
+    monkeypatch.setenv("REPRO_SPMD_PALLAS", pallas)
+    plan = build_plan(rgraph, Workload(list(rqueries)),
+                      PartitionConfig(kind="vertical", num_sites=4))
+    sess = Session(plan, backend="spmd", spmd_capacity=64)
+    for q in rqueries[:6]:
+        want = _answer_set(match_pattern(rgraph, q))
+        assert _answer_set(sess.execute(q)) == want, \
+            f"pallas={pallas} diverged on {q.edges}"
+
+
 # ----------------------------------------------------------------------
 # Overflow auto-retry
 # ----------------------------------------------------------------------
@@ -207,6 +225,7 @@ def test_all_empty_site_plan_executes_cleanly(rgraph):
 # Shape-grouped batch dispatch (SpmdEngine._execute_batch)
 # ----------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_execute_batch_groups_shapes_exactly(rgraph, rqueries):
     """`execute_many` groups same-normalized-shape queries onto one
     device run (later members reuse the binding tables and apply only
@@ -237,6 +256,7 @@ def test_execute_batch_groups_shapes_exactly(rgraph, rqueries):
     assert bat.engine._shared_run_key is None
 
 
+@pytest.mark.slow
 def test_execute_batch_chunks_do_not_share_across_batches(rgraph,
                                                           rqueries):
     """Grouping happens within one `_execute_batch` chunk only: a
