@@ -320,6 +320,46 @@ def bench_spmd_replication() -> None:
 
 
 # ----------------------------------------------------------------------
+# Replica-aware routing: the same plan served by the routed SPMD engine
+# (default) and the whole-mesh engine (`spmd_routing=False`) on the
+# star/chain/cycle workload.  Routing masks non-resident sites out of
+# every collective (peer factor = route width - 1) and rendezvous-pins
+# fully-replicated queries to one device, so the acceptance property is
+# the routed ledger never exceeding the whole-mesh ledger on any shape
+# and strictly undercutting it on at least one
+# (`routed_leq_unrouted_all` / `routed_lt_unrouted_any` rows).  Both
+# sessions run at the same oversized capacity so neither pays retry
+# tiers and the ledgers compare like for like.
+# ----------------------------------------------------------------------
+
+def bench_spmd_routing() -> None:
+    g, wl = _setup(n_triples=8_000, n_queries=500, seed=5)
+    plan = build_plan(g, wl, PartitionConfig(
+        kind="vertical", num_sites=4,
+        replication_budget_bytes=500_000))
+    sessions = {
+        "spmd_unrouted": Session(plan, backend="spmd",
+                                 spmd_capacity=16384,
+                                 spmd_routing=False),
+        "spmd_routed": Session(plan, backend="spmd",
+                               spmd_capacity=16384),
+    }
+    per_shape, _ = _ledger_comparison("spmd_routing", g, sessions)
+    st = sessions["spmd_routed"].stats()
+    for key in ("routed_queries", "route_skipped_steps",
+                "skipped_gathers", "decimated_seed_queries",
+                "gather_steps", "edge_shipped_steps",
+                "capacity_retries", "devices"):
+        emit("spmd_routing", "spmd_routed", key, st.extra[key])
+    emit("spmd_routing", "routed_vs_unrouted", "routed_leq_unrouted_all",
+         float(all(v["spmd_routed"] <= v["spmd_unrouted"]
+                   for v in per_shape.values())))
+    emit("spmd_routing", "routed_vs_unrouted", "routed_lt_unrouted_any",
+         float(any(v["spmd_routed"] < v["spmd_unrouted"]
+                   for v in per_shape.values())))
+
+
+# ----------------------------------------------------------------------
 # Telemetry-layer latency bench: per-backend, per-shape wall-clock
 # latency through the obs histograms (p50/p99 derived from the same
 # fixed-bucket counts a metrics snapshot exports), plus queries/sec.
@@ -495,6 +535,7 @@ def bench_serve() -> None:
 
 ALL = [bench_minsup, bench_throughput, bench_response, bench_scalability,
        bench_redundancy, bench_offline, bench_queries, bench_engine_parity,
-       bench_spmd_comm, bench_spmd_replication, bench_latency, bench_serve]
+       bench_spmd_comm, bench_spmd_replication, bench_spmd_routing,
+       bench_latency, bench_serve]
 
-SMOKE = [bench_engine_parity, bench_latency]
+SMOKE = [bench_engine_parity, bench_spmd_routing, bench_latency]

@@ -281,6 +281,26 @@ def replicated_edge_ids(graph, props: Set[int]) -> np.ndarray:
     return np.nonzero(mask)[0].astype(np.int64)
 
 
+def property_site_map(graph, site_edge_ids: Sequence[np.ndarray]
+                      ) -> Dict[int, Tuple[int, ...]]:
+    """The fragment->site map folded to property granularity: for each
+    property with resident edges, the sorted sites holding at least one
+    of them.  This is what the routing layer consumes
+    (``repro.core.routing``): a query only needs the union of its
+    properties' holder sets, so everything else can be masked out of
+    its execution.  Properties replicated everywhere
+    (``ReplicationPlan.props``) map to every site; a property with no
+    resident edges is absent from the map."""
+    p = np.asarray(graph.p)
+    out: Dict[int, set] = {}
+    for j, eids in enumerate(site_edge_ids):
+        eids = np.asarray(eids, np.int64)
+        for prop in np.unique(p[eids]) if len(eids) else ():
+            out.setdefault(int(prop), set()).add(j)
+    return {prop: tuple(sorted(sites))
+            for prop, sites in sorted(out.items())}
+
+
 # ----------------------------------------------------------------------
 # Bridge: expert placement for MoE architectures (DESIGN.md §5)
 # ----------------------------------------------------------------------

@@ -36,7 +36,8 @@ import numpy as np
 
 from .allocation import (Allocation, ReplicationPlan, allocate_fragments,
                          fap_property_heat, plan_replication,
-                         replicated_edge_ids, workload_property_heat)
+                         property_site_map, replicated_edge_ids,
+                         workload_property_heat)
 from .baselines import (BaselineEngine, BaselineFragmentation,
                         shape_fragmentation, warp_fragmentation)
 from .dictionary import DataDictionary
@@ -285,6 +286,18 @@ class PartitionPlan:
         return [np.unique(np.concatenate(g)) if g
                 else np.zeros(0, np.int64) for g in per_site]
 
+    def property_sites(self) -> Dict[int, Tuple[int, ...]]:
+        """The plan's fragment->site map at property granularity: for
+        each property with resident edges, the sorted sites holding at
+        least one of them (``core.allocation.property_site_map`` over
+        ``site_edge_ids``).  This is the placement view the routing
+        layer consumes at serving time -- the SPMD engine recomputes it
+        device-side from ``SiteStore`` residency metadata, so the two
+        always agree on the realized placement."""
+        if self.graph is None:
+            raise RuntimeError("plan has no attached graph")
+        return property_site_map(self.graph, self.site_edge_ids())
+
     # -- engine construction (the Session facade picks per backend) -----
     def build_local_engine(self, cost: Optional[CostModel] = None
                            ) -> DistributedEngine:
@@ -344,7 +357,8 @@ class PartitionPlan:
                           capacity: int = 4096,
                           cost: Optional[CostModel] = None,
                           max_capacity: Optional[int] = None,
-                          comm_plan: bool = True):
+                          comm_plan: bool = True,
+                          routing: bool = True):
         """Build the jit/shard_map ``SpmdEngine`` over this plan's
         per-site storage.
 
@@ -361,6 +375,10 @@ class PartitionPlan:
                 (ship the smaller of bindings vs. edge rows, skip
                 shard-complete steps); ``False`` gathers binding tables
                 before every join step.
+            routing: per-query site routing (``repro.core.routing``):
+                each query runs only on the devices resident for its
+                non-replicated properties; ``False`` restores
+                whole-mesh execution.  Requires ``comm_plan``.
 
         Returns:
             A ready ``SpmdEngine`` (implements the ``Engine`` protocol).
@@ -375,7 +393,8 @@ class PartitionPlan:
         return SpmdEngine(self.graph, self.site_edge_ids(), mesh=mesh,
                           axis=axis, capacity=capacity, cost=cost,
                           max_capacity=max_capacity, comm_plan=comm_plan,
-                          replicated_props=set(self.replicated_props))
+                          replicated_props=set(self.replicated_props),
+                          routing=routing)
 
     # -- serialization (built on repro.checkpoint) ----------------------
     def save(self, path) -> Path:

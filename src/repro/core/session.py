@@ -53,6 +53,7 @@ class Session:
                  spmd_capacity: int = 4096,
                  spmd_max_capacity: Optional[int] = None,
                  spmd_comm_plan: bool = True,
+                 spmd_routing: bool = True,
                  trace: bool = False,
                  tracer=None,
                  metrics_registry=None):
@@ -73,6 +74,15 @@ class Session:
             spmd_comm_plan: size-aware per-join-step communication
                 planning (default on); ``False`` = naive gather of the
                 binding tables before every join step.
+            spmd_routing: per-query site routing (default on): each
+                query runs only on the devices resident for its
+                non-replicated properties, with replicated-everywhere
+                queries rendezvous-pinned to one device; ``False``
+                restores whole-mesh execution (identical answers --
+                the routed/unrouted parity the exactness and fuzz
+                suites assert).  Inactive when ``spmd_comm_plan`` is
+                off (routing rides on the planner's residency
+                metadata).
             trace: ``True`` builds a private enabled ``Tracer`` for this
                 session (root span per query, backend-specific child
                 spans / step records; see ``docs/observability.md``).
@@ -100,7 +110,8 @@ class Session:
         elif backend == "spmd":
             self.engine = plan.build_spmd_engine(
                 mesh=mesh, axis=spmd_axis, capacity=spmd_capacity, cost=cost,
-                max_capacity=spmd_max_capacity, comm_plan=spmd_comm_plan)
+                max_capacity=spmd_max_capacity, comm_plan=spmd_comm_plan,
+                routing=spmd_routing)
         else:  # adaptive
             # lazy import: repro.online imports repro.core, not vice versa
             from ..online.loop import AdaptiveEngine
@@ -125,6 +136,14 @@ class Session:
     def num_sites(self) -> int:
         """Logical cluster width the plan was built for."""
         return self.engine.num_sites
+
+    def route_key(self, query: QueryGraph):
+        """The backend's routing token for ``query`` (the SPMD route's
+        member devices), or ``None`` on backends without routing.  The
+        serving layer folds it into its shape-bucket keys so
+        micro-batches stay route-coherent."""
+        rk = getattr(self.engine, "route_key", None)
+        return rk(query) if rk is not None else None
 
     @property
     def tracer(self):

@@ -44,6 +44,19 @@ counters.  ``SpmdEngine(comm_plan=False)`` (or
 ``Session(spmd_comm_plan=False)``) restores the naive
 gather-bindings-every-step behaviour.
 
+On top of the planner sits per-query **replica-/load-aware routing**
+(``repro.core.routing``, ``docs/routing.md``): a ``RoutePlan`` computed
+from the same residency metadata masks devices that hold none of the
+query's non-replicated properties out of the whole query -- step 0
+zeroes them via the rank vector, route-complete steps skip their
+collective, and every ledgered byte count uses ``route_width - 1``
+peers instead of ``m - 1``.  Fully-replicated shapes are
+rendezvous-pinned to one device, route-complete seed steps stripe
+seeds across exactly the replica holders, and narrow decimated routes
+start the capacity ladder ``ceil(log2(m/width))`` tiers lower.
+``SpmdEngine(routing=False)`` (or ``Session(spmd_routing=False)``)
+restores whole-mesh execution bit-identically.
+
 Shapes are static everywhere (capacity + valid-count), so the whole
 query plan jits and the production-mesh dry-run can lower/compile it.
 Overflow of a binding table is *counted in-trace* and returned per
@@ -75,6 +88,7 @@ from .executor import CostModel, ExecStats, QueryResult
 from .fragmentation import Fragmentation
 from .graph import RDFGraph
 from .query import PROP_VAR, QueryGraph, _connected_edge_order
+from .routing import RoutePlan, plan_route
 
 
 # ----------------------------------------------------------------------
@@ -97,7 +111,15 @@ class SiteStore:
     * ``prop_dev_distinct[j, p]``  -- distinct edge ids behind those
       rows;
     * ``prop_union_rows[p]``       -- distinct edge ids of ``p``
-      resident anywhere.
+      resident anywhere;
+    * ``prop_dev_owned[j, p]``     -- rows of ``p`` device ``j`` *owns*
+      for edge shipping: each resident edge id is owned by exactly its
+      lowest-indexed holder (first row of the id on that device), so
+      the union of the owned sets is each resident edge exactly once.
+      ``owned`` carries the per-row flags in the same (p, s, o)-sorted
+      order as the main/CSR tables -- the edge-shipping step compacts
+      and gathers only these rows, never the padded window and never a
+      replicated duplicate.
 
     A property is *shard-complete* when every device's distinct set
     equals the union -- e.g. a vertical fragment replicated by
@@ -133,6 +155,8 @@ class SiteStore:
     csr_obj_s: Optional[jax.Array] = None
     csr_offs: Optional[jax.Array] = None    # (m, P + 1) int32
     csr_pad: int = 0
+    prop_dev_owned: Optional[np.ndarray] = None      # (m, P) int64
+    owned: Optional[jax.Array] = None       # (m, e_max + csr_pad) bool
 
     @staticmethod
     def build(graph: RDFGraph, site_edge_ids: Sequence[np.ndarray],
@@ -146,6 +170,12 @@ class SiteStore:
         n_props = graph.num_properties
         dev_rows = np.zeros((m, n_props), np.int64)
         dev_distinct = np.zeros((m, n_props), np.int64)
+        dev_owned = np.zeros((m, n_props), np.int64)
+        # edge ownership for shipping: ascending device order, each
+        # resident edge id claimed by its first holder (first row of
+        # the id within that device), so every resident edge has
+        # exactly one owning row across the mesh
+        owner = np.full(graph.num_edges, -1, np.int64)
         per_site = []
         for j, eids in enumerate(site_edge_ids):
             eids = np.asarray(eids, np.int64)
@@ -156,7 +186,13 @@ class SiteStore:
             dev_rows[j] = np.bincount(p, minlength=n_props)[:n_props]
             dev_distinct[j] = np.bincount(
                 graph.p[np.unique(eids)], minlength=n_props)[:n_props]
-            per_site.append((s, p, o, n))
+            first_here = np.zeros(n, bool)
+            first_here[np.unique(eids, return_index=True)[1]] = True
+            claim = first_here & (owner[eids] < 0)
+            owner[eids[claim]] = j
+            dev_owned[j] = np.bincount(
+                p[claim], minlength=n_props)[:n_props]
+            per_site.append((s, p, o, n, claim[order]))
         resident = np.unique(np.concatenate(
             [np.zeros(0, np.int64)]
             + [np.asarray(e, np.int64) for e in site_edge_ids]))
@@ -175,8 +211,10 @@ class SiteStore:
         obj_o = np.full((m, width), INT32_SENTINEL, np.int32)
         obj_s = np.full((m, width), -1, np.int32)
         offs = np.zeros((m, n_props + 1), np.int32)
-        for j, (s, p, o, n) in enumerate(per_site):
+        owned = np.zeros((m, width), bool)
+        for j, (s, p, o, n, claim_sorted) in enumerate(per_site):
             sub_s[j, :n], sub_o[j, :n] = S[j, :n], O[j, :n]
+            owned[j, :n] = claim_sorted
             order_o = np.lexsort((s, o, p))
             obj_o[j, :n], obj_s[j, :n] = o[order_o], s[order_o]
             offs[j, 1:] = np.cumsum(
@@ -185,7 +223,8 @@ class SiteStore:
                          m, e_max, dev_rows, dev_distinct, union,
                          jnp.asarray(sub_s), jnp.asarray(sub_o),
                          jnp.asarray(obj_o), jnp.asarray(obj_s),
-                         jnp.asarray(offs), pad)
+                         jnp.asarray(offs), pad, dev_owned,
+                         jnp.asarray(owned))
 
     def prop_shard_complete(self, prop: int) -> bool:
         """Every device holds every resident edge of ``prop`` (so a join
@@ -211,22 +250,42 @@ class SiteStore:
     def prop_window(self, prop: int) -> int:
         """Static CSR window rows for ``prop``: the max per-device run,
         rounded up to 8 (min 8).  The ONE sizing formula shared by the
-        per-step table slices, the step-0 seed window, and the
-        planner's edge-gather buffers (``plan_step_comm``), so a
-        gathered table and a local window always agree on shape."""
+        per-step table slices and the step-0 seed window, so a local
+        window always covers the property's full run."""
         _total, per_dev = self.prop_rows(prop)
+        return int(np.ceil(max(per_dev, 1) / 8) * 8)
+
+    def prop_resident_rows(self, prop: int) -> int:
+        """Distinct edges of ``prop`` resident anywhere -- the rows an
+        edge-shipping step puts on the wire (each resident edge ships
+        from its one owning device)."""
+        if (self.prop_union_rows is None
+                or not 0 <= prop < self.prop_union_rows.shape[0]):
+            return 0
+        return int(self.prop_union_rows[prop])
+
+    def prop_ship_window(self, prop: int) -> int:
+        """Static per-device buffer rows for *shipping* ``prop``: the
+        max owned rows on any device, rounded up to 8 (min 8).  Sizes
+        the planner's edge-gather buffers (``plan_step_comm``) --
+        smaller than ``prop_window`` whenever replication stores the
+        same edge on several devices, since only the owner ships it."""
+        if (self.prop_dev_owned is None
+                or not 0 <= prop < self.prop_dev_owned.shape[1]):
+            return 8
+        per_dev = int(self.prop_dev_owned[:, prop].max(initial=0))
         return int(np.ceil(max(per_dev, 1) / 8) * 8)
 
     def csr_arrays(self) -> Optional[Tuple[jax.Array, ...]]:
         """The packed per-property tables as one tuple of device
         arrays (subject-sorted keys/payload, object-sorted
-        keys/payload, offsets), or ``None`` on a store built without
-        them -- the matcher falls back to per-step masked
-        ``argsort`` tables."""
+        keys/payload, offsets, owned-row flags), or ``None`` on a
+        store built without them -- the matcher falls back to per-step
+        masked ``argsort`` tables."""
         if self.csr_offs is None:
             return None
         return (self.csr_sub_s, self.csr_sub_o, self.csr_obj_o,
-                self.csr_obj_s, self.csr_offs)
+                self.csr_obj_s, self.csr_offs, self.owned)
 
     @staticmethod
     def from_fragmentation(graph: RDFGraph, frag: Fragmentation,
@@ -277,40 +336,53 @@ class StepComm:
 
     mode:
       ``"gather"``  -- always ship bindings (planner off);
-      ``"skip"``    -- property is shard-complete, ship nothing;
+      ``"skip"``    -- property is shard-complete (or complete on every
+      route member, flagged ``route_complete``), ship nothing;
       ``"dynamic"`` -- compare the psum'd global binding count against
       ``edge_rows`` in-trace and ship the smaller side.
     """
     mode: str
     prop: int
     gather_cap: int     # per-device edge-gather buffer rows ("dynamic")
-    edge_rows: int      # total resident rows of ``prop`` across devices
+    edge_rows: int      # distinct resident rows of ``prop`` (wire rows)
+    route_complete: bool = False   # skipped via route-local completeness
 
     @property
     def edge_bytes(self) -> int:
         """Wire bytes of shipping this property's resident edge rows
-        (per receiving peer)."""
+        (per receiving peer): compacted owned rows only, so the count
+        is the distinct resident edges -- never the padded window, and
+        never a replicated duplicate."""
         return self.edge_rows * EDGE_ROW_BYTES
 
 
 def plan_step_comm(store: SiteStore, pattern: QueryGraph,
-                   enabled: bool = True) -> Tuple[StepComm, ...]:
+                   enabled: bool = True,
+                   route=None) -> Tuple[StepComm, ...]:
     """One ``StepComm`` per join step (steps >= 1 of the connected edge
     order) for matching ``pattern`` over ``store``.  With
     ``enabled=False`` every step ships bindings -- the naive broadcast
-    join."""
+    join.  ``route`` (a ``repro.core.routing.RoutePlan``) additionally
+    skips steps whose property is complete on every route member: the
+    devices outside the route never hold binding rows, so
+    completeness on the members is all a skip needs."""
+    from .routing import route_prop_complete
     order = _connected_edge_order(pattern)
     specs: List[StepComm] = []
     for ei in order[1:]:
         prop = pattern.edges[ei].prop
-        total, per_dev = store.prop_rows(prop)
+        union = store.prop_resident_rows(prop)
         if not enabled:
-            specs.append(StepComm("gather", prop, 0, total))
+            specs.append(StepComm("gather", prop, 0, union))
         elif store.prop_shard_complete(prop):
-            specs.append(StepComm("skip", prop, 0, total))
+            specs.append(StepComm("skip", prop, 0, union))
+        elif route is not None and route_prop_complete(
+                store, prop, route.members):
+            specs.append(StepComm("skip", prop, 0, union,
+                                  route_complete=True))
         else:
-            specs.append(StepComm("dynamic", prop, store.prop_window(prop),
-                                  total))
+            specs.append(StepComm("dynamic", prop,
+                                  store.prop_ship_window(prop), union))
     return tuple(specs)
 
 
@@ -517,7 +589,9 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
                  comm: Optional[Sequence[StepComm]] = None,
                  axis_size: int = 1, seed_decimate: bool = False,
                  csr: Optional[Tuple[jax.Array, ...]] = None,
-                 prop_windows: Optional[Dict[int, int]] = None
+                 prop_windows: Optional[Dict[int, int]] = None,
+                 route_ranks: Optional[Sequence[int]] = None,
+                 route_width: int = 0
                  ) -> Tuple[jax.Array, jax.Array, List[int], jax.Array,
                             jax.Array, jax.Array]:
     """Match ``pattern`` over one shard's edge table, padded to
@@ -552,7 +626,15 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
     skipped, decisions all ``COMM_SKIP``).  ``axis_size`` (static mesh
     extent) sizes the cache stand-in buffers.  ``seed_decimate`` (see
     ``plan_seed_decimation``) is only valid when step 0's property is
-    shard-complete on every device.
+    shard-complete on every device -- or, with ``route_ranks`` set, on
+    every route member.
+
+    ``route_ranks`` (per-device stripe rank, -1 for devices outside
+    the query's route -- ``RoutePlan.seed_ranks``) masks non-member
+    devices out of step 0 entirely: they hold zero valid rows for the
+    whole query, so every later collective only carries member data.
+    With ``seed_decimate`` the seeds stripe over ``route_width``
+    members instead of the whole mesh.
 
     jit-friendly: static pattern, static capacity, static per-step
     specs; overflow (result rows beyond capacity at any step) is
@@ -588,7 +670,7 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
         the blocked kernels work on it directly.  ``size`` defaults to
         the property's static window (``SiteStore.prop_window``, the
         same formula that sized the planner's gather buffers)."""
-        sub_s_d, sub_o_d, obj_o_d, obj_s_d, offs_d = csr
+        sub_s_d, sub_o_d, obj_o_d, obj_s_d, offs_d = csr[:5]
         if size is None:
             size = (prop_windows or {}).get(prop, 8)
         if not 0 <= prop < n_props:   # never stored: empty static table
@@ -603,6 +685,18 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
         io = jnp.arange(size, dtype=jnp.int32)
         return (jnp.where(io < n, wk, imax),
                 jnp.where(io < n, wp, pay_fill), n)
+
+    def owned_run_window(prop: int, size: int,
+                         n_live: jax.Array) -> jax.Array:
+        """Owned-row flags aligned with ``csr_window(prop, True,
+        size)``: the same dynamic_slice window over the per-device
+        owned flags, tail masked (a window can spill into the next
+        property's run, whose owned rows must not leak in)."""
+        if not 0 <= prop < n_props:
+            return jnp.zeros((size,), bool)
+        start = csr[4][prop]
+        w = jax.lax.dynamic_slice(csr[5], (start,), (size,))
+        return w & (jnp.arange(size, dtype=jnp.int32) < n_live)
 
     bind = jnp.full((capacity, 0), -1, jnp.int32)
     valid = jnp.zeros((capacity,), bool)
@@ -639,7 +733,21 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
                 sel &= seed_o == e.dst
             if e.src < 0 and e.src == e.dst:
                 sel &= seed_s == seed_o
-            if seed_decimate and axis is not None:
+            if route_ranks is not None and axis is not None:
+                # routed execution: devices outside the route never
+                # seed (rank -1), so they hold zero valid rows for the
+                # whole query; with decimation the members additionally
+                # stripe the (route-complete, identically-ordered) seed
+                # list among themselves in rendezvous-rank order
+                my_rank = jnp.asarray(
+                    list(route_ranks),
+                    jnp.int32)[jax.lax.axis_index(axis)]
+                if seed_decimate:
+                    rank = jnp.cumsum(sel) - 1
+                    sel &= (rank % max(route_width, 1)) == my_rank
+                else:
+                    sel &= my_rank >= 0
+            elif seed_decimate and axis is not None:
                 # step 0's property is shard-complete: every device sees
                 # the identical, identically-ordered seed list, so each
                 # keeping every m-th row partitions the seeds exactly
@@ -681,16 +789,20 @@ def _match_shard(s: jax.Array, p: jax.Array, o: jax.Array,
             return jnp.where(sel_, s, imax), jnp.where(sel_, o, imax)
 
         def fresh_prop_tables():
-            # the edge-shipping side: this device's packed rows of the
-            # property (CSR window -- or compact from the padded
-            # columns), gathered from every device (rows this device
-            # lacks arrive from wherever they are resident).  The CSR
-            # window and the compact buffer have the identical shape
-            # (sc.gather_cap == SiteStore.prop_window) and content
-            # ((s, o)-ordered rows, imax fill).
+            # the edge-shipping side: this device's OWNED rows of the
+            # property, compacted into the static ship buffer
+            # (sc.gather_cap == SiteStore.prop_ship_window) and
+            # gathered from every device.  Ownership (exactly one
+            # device per resident edge, see SiteStore) makes the
+            # gathered table each resident edge exactly once: valid
+            # rows on the wire, not the padded window, and no
+            # replicated duplicates to re-expand.  Compacting a
+            # subsequence of the (s, o)-sorted run keeps it sorted;
+            # the imax fill sorts last, as before.
             if csr is not None:
-                ls, lo_, _n = csr_window(e.prop, True, size=sc.gather_cap,
-                                         pay_fill=imax)
+                fk, fp, n_run = csr_window(e.prop, True, pay_fill=imax)
+                ow = owned_run_window(e.prop, fk.shape[0], n_run)
+                (ls, lo_), _ = compact_rows(ow, (fk, fp), sc.gather_cap)
             else:
                 (ls, lo_), _ = compact_rows(p == e.prop, (s, o),
                                             sc.gather_cap)
@@ -917,13 +1029,15 @@ def make_spmd_matcher(mesh: Mesh, axis: str, pattern: QueryGraph,
                       comm: Optional[Sequence[StepComm]] = None,
                       seed_decimate: bool = False,
                       use_csr: bool = False,
-                      prop_windows: Optional[Dict[int, int]] = None):
+                      prop_windows: Optional[Dict[int, int]] = None,
+                      route_ranks: Optional[Sequence[int]] = None,
+                      route_width: int = 0):
     """Build a jitted SPMD function: site-sharded (s,p,o) -> gathered
     binding tables (num_sites * capacity, V), validity mask, the
     per-device overflow row count (num_sites,), and the planner's
     per-join-step decision / shipped-row vectors (replicated).
 
-    With ``use_csr=True`` the function takes the five
+    With ``use_csr=True`` the function takes the six
     ``SiteStore.csr_arrays()`` tables as additional sharded arguments
     (call ``fn(store.s, store.p, store.o, *store.csr_arrays())``) and
     ``prop_windows`` must carry the static per-property window sizes
@@ -936,13 +1050,18 @@ def make_spmd_matcher(mesh: Mesh, axis: str, pattern: QueryGraph,
     results'); those bytes are what the §Roofline collective term
     counts.  A non-zero overflow entry means that device's table filled
     and the caller must retry at a higher capacity for an exact answer.
+    Dynamic (edge-shipping) steps compact each device's *owned* rows
+    from the CSR owned flags, so they require ``use_csr=True``.
 
     ``seed_decimate=True`` asserts step 0's property is shard-complete
     (``plan_seed_decimation``): the seed rows are then striped across
     the mesh so replicated storage becomes partitioned work -- without
     it every device would duplicate every seed and the answer would
     ship ``m`` times.  Only valid when the completeness assertion
-    holds.
+    holds.  ``route_ranks`` / ``route_width``
+    (``RoutePlan.seed_ranks`` / ``RoutePlan.width``) restrict the
+    query to its route members and re-scope the striping to them (see
+    ``_match_shard``).
     """
     # on a 1-device mesh the per-step gathers are identity and the
     # gathered dedup can never find anything (folded site groups are
@@ -950,7 +1069,13 @@ def make_spmd_matcher(mesh: Mesh, axis: str, pattern: QueryGraph,
     # fast path; the mesh size is static at trace time.
     m = int(np.prod(mesh.devices.shape))
     step_axis = axis if m > 1 else None
-    n_in = 8 if use_csr else 3
+    n_in = 9 if use_csr else 3
+    if (not use_csr and comm is not None
+            and any(sc.mode == "dynamic" for sc in comm)):
+        raise ValueError(
+            "edge-shipping comm specs need a CSR-packed store: the "
+            "shipped side is the per-device owned rows, which only the "
+            "CSR owned flags identify (SiteStore.build packs them)")
 
     def per_site(*arrs):
         s, p, o = (a[0] for a in arrs[:3])
@@ -958,7 +1083,8 @@ def make_spmd_matcher(mesh: Mesh, axis: str, pattern: QueryGraph,
         bind, valid, cols, ovf, dec, rows = _match_shard(
             s, p, o, pattern, capacity, axis=step_axis, comm=comm,
             axis_size=m, seed_decimate=seed_decimate, csr=csr,
-            prop_windows=prop_windows)
+            prop_windows=prop_windows, route_ranks=route_ranks,
+            route_width=route_width)
         g_bind = jax.lax.all_gather(bind, axis, tiled=True)
         g_valid = jax.lax.all_gather(valid, axis, tiled=True)
         g_ovf = jax.lax.all_gather(ovf[None], axis, tiled=True)
@@ -1049,6 +1175,18 @@ class SpmdEngine(EngineBase):
     ``comm_plan=False`` restores the naive gather-every-step plan
     (same exact answers, byte ledger accounted the same way).
 
+    With ``routing=True`` (default, active only alongside the planner
+    on a multi-device mesh) each query additionally runs on its
+    ``RoutePlan`` (``repro.core.routing``): devices holding none of
+    the query's non-replicated properties are masked out at step 0 and
+    hold zero valid rows for the whole query, route-complete steps
+    skip their collective (``route_skipped_steps``), fully-replicated
+    shapes are rendezvous-pinned to one device, and every ledgered
+    byte count uses ``route_width - 1`` peers.  ``stats().extra``
+    counts ``routed_queries``; ``ExecStats.sites_touched`` shrinks to
+    the route (feeding the online monitor's per-site heat gauges).
+    ``routing=False`` restores whole-mesh execution bit-identically.
+
     With tracing enabled (``Session(trace=True)`` or a process-default
     tracer, see ``repro.obs``) every query's root span carries one
     structured record per join step per attempted capacity tier --
@@ -1070,7 +1208,8 @@ class SpmdEngine(EngineBase):
                  capacity: int = 4096, cost: Optional[CostModel] = None,
                  max_capacity: Optional[int] = None,
                  comm_plan: bool = True,
-                 replicated_props: Optional[set] = None):
+                 replicated_props: Optional[set] = None,
+                 routing: bool = True):
         self._init_engine_base()
         self.graph = graph
         # provenance from the allocation-aware replication pass: which
@@ -1097,6 +1236,12 @@ class SpmdEngine(EngineBase):
                                 self.capacity)
         self.cost = cost or CostModel()
         self.comm_plan = bool(comm_plan)
+        # per-query routing (repro.core.routing): riding on the comm
+        # planner's residency metadata, so planner off => routing off
+        # (the naive arm must reproduce PR-3 ledger semantics exactly);
+        # trivially off on a 1-device mesh
+        self.routing = bool(routing)
+        self._routes: Dict[Tuple, RoutePlan] = {}
         # keyed by exact edge structure (NOT QueryGraph, whose __eq__ is
         # canonical-isomorphism: isomorphic patterns with different edge
         # orders produce different binding-column orders and must not
@@ -1127,35 +1272,78 @@ class SpmdEngine(EngineBase):
         self._bump("replication_skipped_steps", 0)
         self._bump("edge_cache_hits", 0)
         self._bump("decimated_seed_queries", 0)
+        self._bump("routed_queries", 0)
+        self._bump("route_skipped_steps", 0)
 
     @property
     def num_sites(self) -> int:
         return self.logical_sites
 
     # ------------------------------------------------------------------
+    def _route(self, pattern: QueryGraph) -> Optional[RoutePlan]:
+        """Cached ``plan_route`` for this pattern, or ``None`` when
+        routing is inactive (disabled, planner off, or a 1-device mesh
+        where there is nothing to route)."""
+        if not (self.routing and self.comm_plan
+                and self.store.num_sites > 1):
+            return None
+        rp = self._routes.get(pattern.edges)
+        if rp is None:
+            rp = plan_route(self.store, pattern)
+            self._routes[pattern.edges] = rp
+        return rp
+
     def _comm_spec(self, pattern: QueryGraph) -> Tuple[StepComm, ...]:
         """Static per-join-step communication spec for this pattern over
-        the engine's store (cached; planner on/off is fixed per
-        engine)."""
+        the engine's store (cached; planner and routing on/off are
+        fixed per engine)."""
         spec = self._comm_specs.get(pattern.edges)
         if spec is None:
             spec = plan_step_comm(self.store, pattern,
-                                  enabled=self.comm_plan)
+                                  enabled=self.comm_plan,
+                                  route=self._route(pattern))
             self._comm_specs[pattern.edges] = spec
         return spec
 
     def _seed_decimation(self, pattern: QueryGraph) -> bool:
-        """Cached ``plan_seed_decimation`` for this pattern.  Decimation
-        is part of the planned-serving mode: with the planner off the
-        engine must reproduce the naive gather-every-step baseline
-        exactly (bench_spmd_comm's spmd_naive arm, the PR-3/PR-4
-        ledger semantics)."""
+        """Cached seed-decimation decision for this pattern.  Routed
+        execution uses the route's decision (completeness on the
+        members is enough); otherwise ``plan_seed_decimation``'s
+        mesh-wide rule.  Decimation is part of the planned-serving
+        mode: with the planner off the engine must reproduce the naive
+        gather-every-step baseline exactly (bench_spmd_comm's
+        spmd_naive arm, the PR-3/PR-4 ledger semantics)."""
         dec = self._seed_decim.get(pattern.edges)
         if dec is None:
-            dec = self.comm_plan and plan_seed_decimation(self.store,
-                                                          pattern)
+            route = self._route(pattern)
+            if route is not None:
+                dec = route.decimate
+            else:
+                dec = self.comm_plan and plan_seed_decimation(self.store,
+                                                              pattern)
             self._seed_decim[pattern.edges] = dec
         return dec
+
+    def _start_capacity(self, pattern: QueryGraph) -> int:
+        """First capacity tier for a pattern with no retry-ladder hint.
+        A decimated seed step over ``r`` route members concentrates
+        only ``1/r`` of the seeds per member (vs. ``1/m`` assumed by
+        the configured capacity when the property is mesh-complete), so
+        for a *narrow* route over a non-mesh-complete seed property the
+        ladder starts ``ceil(log2(m / r))`` tiers lower -- floored so
+        the striped seed rows statically fit, and never above the
+        configured capacity.  Cuts recompiles: narrow routes compile
+        small tables first instead of paying the mesh-wide tier."""
+        route = self._route(pattern)
+        m = self.store.num_sites
+        if (route is None or not route.decimate or route.p0_mesh_complete
+                or not 1 <= route.width < m):
+            return self.capacity
+        shift = int(np.ceil(np.log2(m / route.width)))
+        cap = max(self.capacity >> shift, 8)
+        while cap < self.capacity and cap < route.seed_rows:
+            cap *= 2
+        return cap
 
     def _matcher(self, pattern: QueryGraph, capacity: int):
         key = (pattern.edges, capacity)
@@ -1164,11 +1352,18 @@ class SpmdEngine(EngineBase):
             use_csr = self.store.csr_arrays() is not None
             windows = ({e.prop: self.store.prop_window(e.prop)
                         for e in pattern.edges} if use_csr else None)
+            route = self._route(pattern)
             fn = make_spmd_matcher(self.mesh, self.axis, pattern, capacity,
                                    comm=self._comm_spec(pattern),
                                    seed_decimate=self._seed_decimation(
                                        pattern),
-                                   use_csr=use_csr, prop_windows=windows)
+                                   use_csr=use_csr, prop_windows=windows,
+                                   route_ranks=(route.seed_ranks
+                                                if route is not None
+                                                else None),
+                                   route_width=(route.width
+                                                if route is not None
+                                                else 0))
             self._matchers[key] = fn
             self._compiles += 1
         return fn
@@ -1183,7 +1378,7 @@ class SpmdEngine(EngineBase):
         final-gather valid rows) for the comm ledger).  Raises
         RuntimeError if ``max_capacity`` is still too small -- a
         truncated answer is never returned."""
-        cap = self._cap_hints.get(norm.edges, self.capacity)
+        cap = self._cap_hints.get(norm.edges, self._start_capacity(norm))
         caps: List[int] = []
         attempts: List[Tuple[np.ndarray, np.ndarray, int]] = []
         while True:
@@ -1264,6 +1459,13 @@ class SpmdEngine(EngineBase):
         m = self.store.num_sites
         V = len(col_of)
         spec = self._comm_spec(norm)
+        route = self._route(norm)
+        # ledger peers: routed execution only moves data among the
+        # route's members (devices outside the route hold zero valid
+        # rows at every step), so each step ships to width-1 peers.
+        # With routing off (or a whole-mesh route) this is the old m-1.
+        w = route.width if route is not None else m
+        routed = route is not None and route.width < m
         tr = self.tracer
         trace_on = tr.enabled
         comm = 0
@@ -1274,25 +1476,28 @@ class SpmdEngine(EngineBase):
             # would double-ledger them
             if trace_on:
                 tr.annotate(devices=m, capacity_tiers=caps,
-                            shape_reused=True,
+                            shape_reused=True, route_width=w,
+                            routed=routed,
                             comm_planner=bool(self.comm_plan))
         elif m > 1:             # 1 device: no peers, nothing ever ships
             decimated = self._seed_decimation(norm)
             if decimated:
                 self._bump("decimated_seed_queries")
+            if routed:
+                self._bump("routed_queries")
             for ai, (dec, srows, n_final) in enumerate(attempts):
                 for ji, sc in enumerate(spec):
                     d, r = int(dec[ji]), int(srows[ji])
                     row_bytes = bind_row_bytes(step_in_cols[ji])
                     step_bytes = 0
                     if d == COMM_GATHER:
-                        step_bytes = (m - 1) * r * row_bytes
+                        step_bytes = (w - 1) * r * row_bytes
                         self._bump("gather_steps")
                     elif d == COMM_EDGE:
-                        step_bytes = (m - 1) * sc.edge_bytes
+                        step_bytes = (w - 1) * sc.edge_bytes
                         self._bump("edge_shipped_steps")
                         self._bump("comm_bytes_saved",
-                                   (m - 1) * (r * row_bytes
+                                   (w - 1) * (r * row_bytes
                                               - sc.edge_bytes))
                     elif d == COMM_EDGE_CACHED:
                         # the global edge table was already live in this
@@ -1300,9 +1505,11 @@ class SpmdEngine(EngineBase):
                         # gather avoided
                         self._bump("edge_cache_hits")
                         self._bump("comm_bytes_saved",
-                                   (m - 1) * r * row_bytes)
+                                   (w - 1) * r * row_bytes)
                     else:
                         self._bump("skipped_gathers")
+                        if sc.route_complete:
+                            self._bump("route_skipped_steps")
                         if sc.prop in self.replicated_props:
                             self._bump("replication_skipped_steps")
                     comm += step_bytes
@@ -1317,9 +1524,10 @@ class SpmdEngine(EngineBase):
                             "prop": sc.prop,
                             "decision": COMM_DECISION_NAMES[d],
                             "rows": r, "bytes": step_bytes,
+                            "route_width": w,
                             "occupancy": (r / (m * caps[ai])
                                           if d != COMM_SKIP else 0.0)})
-                final_bytes = (m - 1) * n_final * bind_row_bytes(V)
+                final_bytes = (w - 1) * n_final * bind_row_bytes(V)
                 comm += final_bytes
                 if trace_on:
                     tr.add_record({
@@ -1327,12 +1535,14 @@ class SpmdEngine(EngineBase):
                         "capacity": caps[ai], "step": len(spec) + 1,
                         "prop": -1, "decision": "final_gather",
                         "rows": n_final, "bytes": final_bytes,
+                        "route_width": w,
                         "occupancy": n_final / (m * caps[ai])})
             if trace_on:
                 tr.annotate(devices=m, capacity_tiers=caps,
                             overflow_events=len(caps) - 1,
                             capacity_retries=len(caps) - 1,
                             seed_decimated=bool(decimated),
+                            route_width=w, routed=routed,
                             comm_planner=bool(self.comm_plan))
         elif trace_on:
             # 1-device mesh: no peers, no collectives -- the span says
@@ -1341,11 +1551,17 @@ class SpmdEngine(EngineBase):
                         overflow_events=len(caps) - 1,
                         capacity_retries=len(caps) - 1,
                         seed_decimated=False,
+                        route_width=1, routed=False,
                         comm_planner=bool(self.comm_plan))
         elapsed = time.perf_counter() - t0
-        stats = ExecStats(elapsed, int(comm),
-                          set(range(self.logical_sites)),
-                          {j: elapsed / max(m, 1) for j in range(m)}, n, 1)
+        if routed:
+            touched = {j for j in range(self.logical_sites)
+                       if (j % m) in route.member_set}
+            busy = {j: elapsed / max(w, 1) for j in route.members}
+        else:
+            touched = set(range(self.logical_sites))
+            busy = {j: elapsed / max(m, 1) for j in range(m)}
+        stats = ExecStats(elapsed, int(comm), touched, busy, n, 1)
         return self._finish(query, QueryResult(bindings, n, stats))
 
     def _execute_batch(self, batch: List[QueryGraph]) -> List[QueryResult]:
@@ -1386,10 +1602,23 @@ class SpmdEngine(EngineBase):
                 self._shared_run = None
         return out
 
+    def route_key(self, query: QueryGraph) -> Optional[Tuple[int, ...]]:
+        """Stable routing token for ``query``: its route's member
+        devices, or ``None`` when routing is inactive (or the query is
+        unroutable).  A pure function of the *normalized* shape, so the
+        serving layer can fold it into its shape-bucket keys without
+        ever splitting a same-shape batch (``repro.serve``)."""
+        if any(e.prop == PROP_VAR for e in query.edges):
+            return None
+        route = self._route(query.normalize())
+        return route.members if route is not None else None
+
     def _stats_extra(self) -> Dict[str, float]:
         return {"compiled_shapes": float(self._compiles),
                 "devices": float(self.store.num_sites),
                 "comm_planner": float(self.comm_plan),
+                "routing": float(bool(self.routing and self.comm_plan
+                                      and self.store.num_sites > 1)),
                 "replicated_props": float(len(self.replicated_props)),
                 "pallas_join_kernels": float(_use_pallas_probes()),
                 "csr_prop_tables": float(

@@ -160,8 +160,11 @@ class AdaptiveEngine(EngineBase):
 
     # ------------------------------------------------------------------
     def _install_hook(self) -> None:
+        # feed the per-site heat gauges from each result's touched
+        # sites (routed SPMD execution reports only the route members)
         self.engine.post_execute_hooks.append(
-            lambda q, r: self.monitor.observe(q))
+            lambda q, r: self.monitor.observe(
+                q, sites=getattr(r.stats, "sites_touched", None)))
         # keep the wrapped engine on this engine's telemetry streams
         # (fresh inner engines are built at every re-partition)
         self.engine.set_tracer(self.tracer)

@@ -92,6 +92,13 @@ class WorkloadMonitor:
         self.query_prop_mass = np.zeros(num_properties, dtype=np.float64)
         self.total_mass = 0.0          # decayed query count (scaled units)
         self.queries_seen = 0          # raw count, undecayed
+        # decayed per-site heat (scaled units), fed from each executed
+        # query's ``ExecStats.sites_touched`` -- with routed SPMD
+        # execution only the route's members heat up, so the gauges
+        # separate genuinely hot sites from mesh-wide broadcast noise.
+        # Keyed (not dense): the site count is a plan property the
+        # monitor does not need to know up front.
+        self.site_mass: Dict[int, float] = {}
         # reservoir sample of raw queries for predicate mining
         self.reservoir_size = reservoir_size
         self.reservoir: List[QueryGraph] = []
@@ -100,8 +107,12 @@ class WorkloadMonitor:
         self._unit = 1.0               # weight of the *next* observation
 
     # ------------------------------------------------------------------
-    def observe(self, query: QueryGraph) -> None:
-        """Fold one executed query in.  O(|query| + depth) = O(1)."""
+    def observe(self, query: QueryGraph, sites=None) -> None:
+        """Fold one executed query in.  O(|query| + depth) = O(1).
+
+        ``sites`` (optional iterable of site ids, e.g.
+        ``ExecStats.sites_touched``) additionally heats the per-site
+        gauges -- see ``site_heat`` / ``hot_sites``."""
         self.queries_seen += 1
         # decay everyone by bumping the unit weight of new arrivals
         self._unit /= self.decay
@@ -123,6 +134,10 @@ class WorkloadMonitor:
         for p in set(norm.properties()):
             if 0 <= p < self.num_properties:
                 self.query_prop_mass[p] += u
+        if sites is not None:
+            for j in sites:
+                j = int(j)
+                self.site_mass[j] = self.site_mass.get(j, 0.0) + u
         self.total_mass += u
         self._reservoir_add(query)
         if self._unit > 1e12:
@@ -158,6 +173,8 @@ class WorkloadMonitor:
         self.sketch.scale(inv)
         self.edge_prop_mass *= inv
         self.query_prop_mass *= inv
+        for j in self.site_mass:
+            self.site_mass[j] *= inv
         self.total_mass *= inv
         self._unit = 1.0
 
@@ -201,6 +218,26 @@ class WorkloadMonitor:
         theta = max(self.total_mass * theta_fraction, 1e-12)
         return sorted(int(p) for p in
                       np.nonzero(self.query_prop_mass >= theta)[0])
+
+    def site_heat(self) -> Dict[int, float]:
+        """Decayed per-site load shares (sum to 1 over the observed
+        sites; empty before any ``observe(..., sites=...)``).  A
+        routed query heats only its route members, so the shares are
+        the live analogue of the §6 allocation's balance objective."""
+        tot = sum(self.site_mass.values())
+        if tot <= 0:
+            return {}
+        return {j: m / tot for j, m in sorted(self.site_mass.items())}
+
+    def hot_sites(self, factor: float = 2.0) -> List[int]:
+        """Sites whose decayed load share exceeds ``factor`` times the
+        fair share (1 / #observed sites) -- the AdPart-style trigger
+        for flagging shards to split or rebalance."""
+        heat = self.site_heat()
+        if not heat:
+            return []
+        fair = 1.0 / len(heat)
+        return sorted(j for j, h in heat.items() if h > factor * fair)
 
     def raw_sample(self) -> Workload:
         """Recency-biased raw-query sample (constants intact) for §5.2

@@ -61,6 +61,12 @@ class RefragmentResult:
     # config's replication budget is 0); the migration planner decides
     # how much of the diff to ship this epoch
     desired_replication: Optional[ReplicationPlan] = None
+    # sites whose decayed load share exceeds the monitor's hot-site
+    # factor (AdPart-style): routed execution concentrates load on the
+    # fragment holders, so a persistently hot site means its shards
+    # should be split/replicated -- the migration planner gets them
+    # flagged here and can prioritize moves off them within budget
+    hot_sites: tuple = ()
 
 
 def warm_mine(uniq: Sequence[QueryGraph], weights: np.ndarray, min_sup: int,
@@ -163,6 +169,11 @@ def refragment(graph: RDFGraph, monitor: WorkloadMonitor,
               if replica_bytes_per_edge is not None else {})
         repl = plan_replication(graph, cfg.num_sites,
                                 cfg.replication_budget_bytes, heat, **kw)
+
+    # --- hot-shard flagging (AdPart-style): surface the sites whose
+    # decayed load share runs hot so the migration planner can
+    # prioritize splitting/rebalancing their fragments ---
+    hot = tuple(monitor.hot_sites())
     return RefragmentResult(frag, alloc, selected, cold_props,
                             sel_U, weights, len(fps), kept,
-                            time.perf_counter() - t0, repl)
+                            time.perf_counter() - t0, repl, hot)

@@ -54,15 +54,25 @@ class ShapeBatcher:
     Requests must expose ``query`` and ``enqueued_at`` attributes (the
     front door's ``_Request``); arrival order is preserved within a
     bucket, and ``depth`` counts every request not yet taken.
+
+    ``route_key`` (optional callable ``query -> hashable | None``)
+    appends a routing token to the bucket key, so requests only batch
+    together when they would also execute on the same replica route
+    (``SpmdEngine.route_key``).  The route is a pure function of the
+    normalized shape, so same-shape requests always carry the same
+    token -- the refinement never splits a shape's bucket, it only
+    keeps the key honest about what a dispatch will touch.
     """
 
-    def __init__(self, max_batch: int = 16, max_delay_s: float = 0.005):
+    def __init__(self, max_batch: int = 16, max_delay_s: float = 0.005,
+                 route_key=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_delay_s < 0:
             raise ValueError(f"max_delay_s must be >= 0, got {max_delay_s}")
         self.max_batch = int(max_batch)
         self.max_delay_s = float(max_delay_s)
+        self.route_key = route_key
         self._buckets: Dict[ShapeKey, List[Any]] = {}
         self._ready: List[Batch] = []
         self.depth = 0
@@ -72,6 +82,8 @@ class ShapeBatcher:
         """Enqueue one admitted request into its shape bucket; a bucket
         reaching ``max_batch`` moves to the ready list immediately."""
         key = shape_key(request.query)
+        if self.route_key is not None:
+            key = (key, self.route_key(request.query))
         bucket = self._buckets.setdefault(key, [])
         bucket.append(request)
         self.depth += 1

@@ -312,7 +312,12 @@ class FrontDoor:
         self.metrics = registry if registry is not None else getattr(
             engine, "metrics", None) or _obs_metrics.get_registry()
         cfg = self.config
-        self.batcher = ShapeBatcher(cfg.max_batch, cfg.max_delay_ms / 1e3)
+        # route-aware bucket keys: requests only batch together when
+        # they would execute on the same replica route (a no-op for
+        # engines without routing -- route_key is absent or None)
+        self.batcher = ShapeBatcher(cfg.max_batch, cfg.max_delay_ms / 1e3,
+                                    route_key=getattr(engine, "route_key",
+                                                      None))
         self.breaker = CircuitBreaker(
             cfg.breaker_window, cfg.breaker_min_events,
             cfg.breaker_failure_ratio, cfg.breaker_cooldown_s,
@@ -467,7 +472,7 @@ class FrontDoor:
         queries = [r.query for r in live]
         with tracer.span("serve_batch", backend="serve",
                          batch=len(live), flush=batch.reason,
-                         shape_edges=len(batch.key)):
+                         shape_edges=len(live[0].query.normalize().edges)):
             now = self.clock()
             for r in live:
                 wait = now - r.enqueued_at

@@ -49,20 +49,22 @@ CAPACITIES = (128, 1024, 4096)        # 128 forces the overflow retry ladder
 FUZZ_EXAMPLES = max(1, int(os.environ.get("REPRO_FUZZ_EXAMPLES", "2")))
 
 
-def _sessions(plan, mesh, capacity):
+def _sessions(plan, mesh, capacity, routing=True):
     """Every backend this plan can serve (4 for workload-driven plans,
     baseline+spmd for the hash/min-cut baselines)."""
     out = {"baseline": Session(plan, backend="baseline"),
            "spmd": Session(plan, backend="spmd", mesh=mesh,
-                           spmd_capacity=capacity)}
+                           spmd_capacity=capacity,
+                           spmd_routing=bool(routing))}
     if plan.frag is not None:
         out["local"] = Session(plan, backend="local")
         out["adaptive"] = Session(plan, backend="adaptive")
     return out
 
 
-def _assert_parity(graph, plan, mesh, capacity, queries, label):
-    sessions = _sessions(plan, mesh, capacity)
+def _assert_parity(graph, plan, mesh, capacity, queries, label,
+                   routing=True):
+    sessions = _sessions(plan, mesh, capacity, routing)
     for qi, q in enumerate(queries):
         want_vars, want = answer_set(match_pattern(graph, q))
         for name, sess in sessions.items():
@@ -81,9 +83,10 @@ def _assert_parity(graph, plan, mesh, capacity, queries, label):
        st.integers(1, max(N_DEVICES, 1)),    # mesh width
        st.integers(0, len(CAPACITIES) - 1),  # capacity tier
        st.integers(0, 1),                    # replication off / on
-       st.integers(0, 1))                    # Pallas join kernels off / on
+       st.integers(0, 1),                    # Pallas join kernels off / on
+       st.integers(0, 1))                    # replica routing off / on
 def test_randomized_backend_parity(seed, kind_i, mesh_n, cap_i, repl,
-                                   pallas):
+                                   pallas, routing):
     """The generative core property: every backend == whole-graph
     matching, for every drawn configuration -- including the Pallas
     join-kernel path (interpret mode on CPU) vs the jnp oracles."""
@@ -102,7 +105,8 @@ def test_randomized_backend_parity(seed, kind_i, mesh_n, cap_i, repl,
     try:
         _assert_parity(graph, plan, mesh, capacity, queries,
                        f"seed={seed} kind={kind} mesh={mesh_n} "
-                       f"cap={capacity} repl={repl} pallas={pallas}")
+                       f"cap={capacity} repl={repl} pallas={pallas} "
+                       f"routing={routing}", routing=routing)
     finally:
         if prev is None:
             os.environ.pop("REPRO_SPMD_PALLAS", None)
@@ -127,7 +131,13 @@ def test_randomized_replication_never_changes_answers(seed):
     ledgers = {}
     answers = {}
     for b, plan in plans.items():
-        sess = Session(plan, backend="spmd", spmd_capacity=4096)
+        # routing off: the property compares the two *replication*
+        # budgets under identical whole-mesh execution; with routing on
+        # the rendezvous pick pins shard-complete queries to a single
+        # replica, which changes the ledger baseline the comparison is
+        # pinned against (the routed ledger gets its own property below)
+        sess = Session(plan, backend="spmd", spmd_capacity=4096,
+                       spmd_routing=False)
         answers[b] = [answer_set(sess.execute(q)) for q in queries]
         st_ = sess.stats()
         assert st_.extra["capacity_retries"] == 0
@@ -135,3 +145,33 @@ def test_randomized_replication_never_changes_answers(seed):
     assert answers[0] == answers[10 ** 9], f"seed={seed}"
     assert ledgers[10 ** 9] <= ledgers[0], (f"seed={seed}: replicated "
                                             f"ledger {ledgers}")
+
+
+@settings(max_examples=max(1, FUZZ_EXAMPLES - 1), deadline=None)
+@given(st.integers(0, 2 ** 31 - 1),           # master seed
+       st.integers(0, 1))                     # replication off / on
+def test_randomized_routing_never_changes_answers(seed, repl):
+    """Routing is transparent: the routed and whole-mesh engines
+    produce identical answer sets on the same plan, and when neither
+    engine had to climb the capacity ladder the routed ledger never
+    exceeds the whole-mesh ledger (masking non-resident sites out of a
+    collective can only shrink the peer factor)."""
+    graph = skewed_graph(seed + 13, n_verts=60, n_props=5, n_edges=220)
+    queries = shape_workload(graph, seed + 14, sizes=(2,))
+    budget = 10 ** 9 if repl else 0
+    plan = build_plan(graph, Workload(list(queries)), PartitionConfig(
+        kind="vertical", num_sites=4, replication_budget_bytes=budget))
+    stats = {}
+    answers = {}
+    for routing in (True, False):
+        sess = Session(plan, backend="spmd", spmd_capacity=4096,
+                       spmd_routing=routing)
+        answers[routing] = [answer_set(sess.execute(q)) for q in queries]
+        stats[routing] = sess.stats()
+    assert answers[True] == answers[False], f"seed={seed} repl={repl}"
+    retries = {r: s.extra["capacity_retries"] for r, s in stats.items()}
+    if retries[True] == 0 and retries[False] == 0:
+        assert stats[True].comm_bytes <= stats[False].comm_bytes, (
+            f"seed={seed} repl={repl}: routed ledger "
+            f"{stats[True].comm_bytes} > whole-mesh "
+            f"{stats[False].comm_bytes}")

@@ -101,6 +101,42 @@ def test_spmd_trace_reconciles_with_ledger(spmd_setup):
 
 
 @pytest.mark.slow
+def test_routed_trace_carries_route_width_and_reconciles(spmd_setup):
+    """Replica routing keeps the trace honest: every ``comm_step``
+    record of a routed query carries ``route_width`` in [1, m] (the
+    peer factor its byte formula used), the root span annotates the
+    width and the routed flag, and the routed trace still reconciles
+    with the ledger byte-for-byte -- delta zero on every query."""
+    g, plan = spmd_setup
+    tracer = Tracer(enabled=True, capacity=256)
+    sess = Session(plan, backend="spmd", tracer=tracer,
+                   metrics_registry=MetricsRegistry())
+    m = sess.engine.store.num_sites
+    assert sess.stats().extra["routing"] == float(m > 1)
+    saw_narrow = False
+    for q in _shape_queries(g):
+        before = sess.stats().comm_bytes
+        sess.execute(q)
+        delta = sess.stats().comm_bytes - before
+        root = tracer.store.spans()[-1]
+        assert "route_width" in root.attrs
+        w = root.attrs["route_width"]
+        assert 1 <= w <= m
+        assert root.attrs["routed"] == (w < m and m > 1)
+        saw_narrow |= bool(root.attrs["routed"])
+        recs = [r for r in root.records if r["kind"] == "comm_step"]
+        # every record carries the width its byte formula used, and the
+        # routed trace<->ledger delta is exactly zero
+        assert all(r["route_width"] == w for r in recs)
+        assert sum(r["bytes"] for r in recs) - delta == 0
+    if m > 1:
+        # the vertical allocation concentrates properties, so at least
+        # one shape of the sweep must have routed below the full mesh
+        assert saw_narrow
+        assert sess.stats().extra["routed_queries"] > 0
+
+
+@pytest.mark.slow
 def test_spmd_trace_covers_retry_tiers(spmd_setup):
     """A query forced through the overflow retry ladder traces every
     attempted tier, and the bytes of *all* tiers are ledgered."""

@@ -1,0 +1,275 @@
+"""Unit tests for the replica-/load-aware routing layer
+(``repro.core.routing``) plus the owned-row edge-ship wire format.
+
+Covers ``plan_route`` in isolation (membership = holder union,
+rendezvous pinning of fully-replicated queries, stripe ranks,
+route-local decimation and its capacity-tier math), the routing-aware
+``plan_step_comm`` specs, the engine-level knobs (``route_key``,
+``_start_capacity``, ``ExecStats.sites_touched``), and the PR-8 wire
+format fix: shipped edge rows are the *distinct resident* rows --
+compacted owned rows -- never the padded ``prop_window`` width and
+never a replicated duplicate.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.graph import RDFGraph
+from repro.core.matching import match_pattern
+from repro.core.query import PROP_VAR, QueryGraph
+from repro.core.routing import (RoutePlan, plan_route,
+                                route_prop_complete)
+from repro.core.spmd import (EDGE_ROW_BYTES, SiteStore, SpmdEngine,
+                             bind_row_bytes, plan_step_comm)
+
+MULTI = len(jax.devices()) > 1
+needs_mesh = pytest.mark.skipif(
+    not MULTI, reason="routing outcomes need a multi-device mesh")
+# the engine-level expectations below are written against the 4-site
+# residency layout; on a 1/2-device mesh the logical sites fold and
+# replicated copies collapse into shard-completeness
+mesh4 = pytest.mark.skipif(
+    len(jax.devices()) != 4,
+    reason="residency expectations assume a 4-device mesh")
+
+
+def _graph(triples, num_v, num_p) -> RDFGraph:
+    t = np.asarray(sorted(set(map(tuple, triples))), dtype=np.int64)
+    return RDFGraph(t[:, 0], t[:, 1], t[:, 2], num_v, num_p)
+
+
+@pytest.fixture(scope="module")
+def layout():
+    """Four properties with known residency over a 4-site split:
+
+    * prop 0 -- split between sites 0 and 1 (incomplete, no overlap);
+    * prop 1 -- full copy on BOTH sites 0 and 1, absent elsewhere
+      (mesh-incomplete but complete on the {0, 1} route);
+    * prop 2 -- replicated on every site (mesh-complete);
+    * prop 3 -- split between sites 2 and 3.
+    """
+    triples = [(i, 0, 200 + i) for i in range(40)]
+    triples += [(i, 1, 300 + i) for i in range(12)]
+    triples += [(i, 2, 340 + i) for i in range(20)]
+    triples += [(i, 3, 380 + i) for i in range(16)]
+    g = _graph(triples, 500, 4)
+    p = np.asarray(g.p)
+    ids = {prop: np.nonzero(p == prop)[0] for prop in range(4)}
+    sites = [
+        np.unique(np.concatenate([ids[0][0::2], ids[1], ids[2]])),
+        np.unique(np.concatenate([ids[0][1::2], ids[1], ids[2]])),
+        np.unique(np.concatenate([ids[3][0::2], ids[2]])),
+        np.unique(np.concatenate([ids[3][1::2], ids[2]])),
+    ]
+    return g, SiteStore.build(g, sites), sites
+
+
+# ----------------------------------------------------------------------
+# plan_route: membership, rendezvous, ranks, decimation
+# ----------------------------------------------------------------------
+
+def test_route_members_are_incomplete_holder_union(layout):
+    g, store, _ = layout
+    # mesh-complete prop 2 contributes no members: the route is pinned
+    # by the incomplete prop 0, resident on sites 0 and 1 only
+    q = QueryGraph.make([(-1, -2, 0), (-1, -3, 2)])
+    route = plan_route(store, q)
+    assert route.members == (0, 1)
+    assert route.width == 2 and route.mesh_width == 4
+    assert not route.whole_mesh and not route.rendezvous
+    # props from disjoint halves of the mesh union to the whole mesh
+    q2 = QueryGraph.make([(-1, -2, 0), (-2, -3, 3)])
+    route2 = plan_route(store, q2)
+    assert route2.members == (0, 1, 2, 3)
+    assert route2.whole_mesh
+
+
+def test_rendezvous_pins_fully_replicated_query(layout):
+    g, store, _ = layout
+    q = QueryGraph.make([(-1, -2, 2), (-2, -3, 2)])
+    route = plan_route(store, q)
+    assert route.rendezvous and route.width == 1
+    # deterministic: same pattern, same pick, every call
+    assert plan_route(store, q).members == route.members
+    # the pick is a real mesh device and the only rank >= 0
+    (pick,) = route.members
+    assert 0 <= pick < 4
+    assert [r >= 0 for r in route.seed_ranks] == \
+        [j == pick for j in range(4)]
+
+
+def test_seed_ranks_permute_members_and_mask_outsiders(layout):
+    g, store, _ = layout
+    q = QueryGraph.make([(-1, -2, 0), (-1, -3, 1)])
+    route = plan_route(store, q)
+    assert route.members == (0, 1)
+    member_ranks = sorted(route.seed_ranks[j] for j in route.members)
+    assert member_ranks == list(range(route.width))
+    for j in range(4):
+        assert (route.seed_ranks[j] == -1) == (j not in route.member_set)
+
+
+def test_route_local_decimation_and_seed_rows(layout):
+    g, store, _ = layout
+    # seed on prop 1: a full, duplicate-free copy on both route members
+    # but NOT mesh-complete -> decimate on the route, tier math applies
+    q = QueryGraph.make([(-1, -2, 1), (-1, -3, 0)])
+    route = plan_route(store, q)
+    assert route.members == (0, 1)
+    assert route.decimate and not route.p0_mesh_complete
+    assert route.seed_rows == -(-12 // 2)
+    # seed on the split prop 0: members hold different halves -> no
+    # route-complete seed table, no decimation
+    q2 = QueryGraph.make([(-1, -2, 0), (-1, -3, 1)])
+    assert not plan_route(store, q2).decimate
+
+
+def test_route_prop_complete_is_member_local(layout):
+    g, store, _ = layout
+    assert route_prop_complete(store, 1, (0, 1))
+    assert not route_prop_complete(store, 1, (0, 1, 2))
+    assert not route_prop_complete(store, 0, (0, 1))
+    assert route_prop_complete(store, 2, (0, 1, 2, 3))
+    # out-of-metadata props are trivially complete
+    assert route_prop_complete(store, 17, (0, 1))
+
+
+def test_plan_route_falls_back_to_whole_mesh(layout):
+    g, store, _ = layout
+    # wildcard property: residency is unknowable at plan time
+    q = QueryGraph.make([(-1, -2, PROP_VAR)])
+    route = plan_route(store, q)
+    assert route.whole_mesh and not route.decimate
+    # no metadata at all (planner off stores none)
+    bare = SiteStore.build(g, [np.arange(g.num_edges)])
+    r2 = plan_route(bare, QueryGraph.make([(-1, -2, 0)]))
+    assert r2.mesh_width == 1 and r2.whole_mesh
+
+
+# ----------------------------------------------------------------------
+# Routing-aware step specs
+# ----------------------------------------------------------------------
+
+def test_route_complete_step_becomes_skip(layout):
+    g, store, _ = layout
+    q = QueryGraph.make([(-1, -2, 0), (-1, -3, 1)])
+    route = plan_route(store, q)
+    spec = plan_step_comm(store, q, enabled=True, route=route)
+    (sc,) = spec
+    assert sc.prop == 1
+    # mesh-incomplete, but complete on every route member: ship nothing
+    assert sc.mode == "skip" and sc.route_complete
+    # without the route the same step must ship (prop 1 is not
+    # mesh-complete)
+    (sc2,) = plan_step_comm(store, q, enabled=True, route=None)
+    assert sc2.mode == "dynamic" and not sc2.route_complete
+
+
+# ----------------------------------------------------------------------
+# Engine integration: capacity tier, route_key, sites_touched
+# ----------------------------------------------------------------------
+
+@mesh4
+def test_start_capacity_lowered_only_for_narrow_decimated_routes(layout):
+    g, _, sites = layout
+    eng = SpmdEngine(g, sites, capacity=4096)
+    # width-2 decimated route, p0 not mesh-complete: one tier down
+    q = QueryGraph.make([(-1, -2, 1), (-1, -3, 0)]).normalize()
+    assert eng._start_capacity(q) == 2048
+    # whole-mesh route: configured capacity untouched
+    q2 = QueryGraph.make([(-1, -2, 0), (-2, -3, 3)]).normalize()
+    assert eng._start_capacity(q2) == 4096
+    # routing off: always the configured capacity
+    off = SpmdEngine(g, sites, capacity=4096, routing=False)
+    assert off._start_capacity(q) == 4096
+
+
+@mesh4
+def test_route_key_is_stable_and_none_when_inactive(layout):
+    g, _, sites = layout
+    eng = SpmdEngine(g, sites, capacity=4096)
+    q = QueryGraph.make([(-1, -2, 0), (-1, -3, 2)])
+    key = eng.route_key(q)
+    assert key == (0, 1)
+    assert eng.route_key(q) == key              # cached + deterministic
+    # wildcard-property queries never get a route token
+    assert eng.route_key(QueryGraph.make([(-1, -2, PROP_VAR)])) is None
+    # routing off: no token, buckets fall back to pure shape keys
+    off = SpmdEngine(g, sites, capacity=4096, routing=False)
+    assert off.route_key(q) is None
+
+
+@mesh4
+def test_sites_touched_shrinks_to_route_members(layout):
+    g, _, sites = layout
+    q = QueryGraph.make([(-1, -2, 0), (-1, -3, 1)])
+    want = match_pattern(g, q).num_rows
+    eng = SpmdEngine(g, sites, capacity=4096)
+    r = eng.execute(q)
+    assert r.num_rows == want
+    assert r.stats.sites_touched == {0, 1}
+    off = SpmdEngine(g, sites, capacity=4096, routing=False)
+    r2 = off.execute(q)
+    assert r2.num_rows == want
+    assert r2.stats.sites_touched == {0, 1, 2, 3}
+
+
+# ----------------------------------------------------------------------
+# Owned-row edge-ship wire format (PR-8 fix regression)
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def overlap_setup():
+    """Dense seed prop 0 split across all sites; tiny prop 1 stored as
+    a FULL copy on sites 0 and 1 (12 distinct edges, 24 stored rows):
+    the edge-ship step must put 12 rows on the wire, not 24 and not a
+    padded window."""
+    rng = np.random.default_rng(3)
+    triples = [(int(s), 0, int(o))
+               for s, o in zip(rng.integers(0, 40, 3000),
+                               rng.integers(40, 80, 3000))]
+    triples += [(40 + i, 1, 100 + i) for i in range(12)]
+    g = _graph(triples, 200, 2)
+    p = np.asarray(g.p)
+    dense = np.nonzero(p == 0)[0]
+    small = np.nonzero(p == 1)[0]
+    sites = [np.unique(np.concatenate([dense[0::4], small])),
+             np.unique(np.concatenate([dense[1::4], small])),
+             dense[2::4], dense[3::4]]
+    return g, sites
+
+
+def test_edge_ship_rows_are_distinct_resident_rows(overlap_setup):
+    g, sites = overlap_setup
+    store = SiteStore.build(g, sites)
+    q = QueryGraph.make([(-1, -2, 0), (-2, -3, 1)])
+    (sc,) = plan_step_comm(store, q, enabled=True)
+    assert sc.mode == "dynamic"
+    # 12 distinct resident edges, even though 24 rows are stored and
+    # the per-device gather buffer pads to a multiple of 8
+    assert sc.edge_rows == 12
+    assert sc.edge_bytes == 12 * EDGE_ROW_BYTES
+    assert sc.gather_cap >= 12
+    # ownership is exclusive: the 12 shipped rows come from exactly one
+    # holder each (here the lowest site holding the copy)
+    assert int(store.prop_dev_owned[:, 1].sum()) == 12
+
+
+@mesh4
+def test_edge_ship_ledger_pinned_to_valid_row_count(overlap_setup):
+    """End to end: the ledgered (and traced) bytes of the edge-ship
+    step are ``(w - 1) * distinct_rows * EDGE_ROW_BYTES`` -- a
+    replicated copy is not shipped twice, padding is not shipped at
+    all, and the answer stays exact."""
+    g, sites = overlap_setup
+    q = QueryGraph.make([(-1, -2, 0), (-2, -3, 1)])
+    want = match_pattern(g, q).num_rows
+    eng = SpmdEngine(g, sites, capacity=1 << 15)
+    assert eng.execute(q).num_rows == want
+    extra = eng.stats().extra
+    assert extra["capacity_retries"] == 0
+    assert extra["edge_shipped_steps"] == 1
+    m = len(jax.devices())
+    # whole-mesh route here (prop 0 lives everywhere), so w == m
+    expect = (m - 1) * (12 * EDGE_ROW_BYTES + want * bind_row_bytes(3))
+    assert eng.stats().comm_bytes == expect

@@ -585,6 +585,38 @@ def test_served_answers_match_direct_execution(served_setup, backend):
         assert sa == sb, f"{backend}: answer set diverged on {q.edges}"
 
 
+def test_routed_serving_buckets_still_batch_exactly(served_setup):
+    """Serving over the *routed* SPMD engine: the door's bucket key
+    gains the engine's route token.  The token is a pure function of
+    the normalized shape, so the refinement never splits a same-shape
+    bucket -- requests still coalesce into one dispatch per shape,
+    ``batch_shape_hits`` stays exact, and served answers equal direct
+    routed execution."""
+    from repro.core import Session
+    from repro.serve.batcher import shape_key
+    plan, queries = served_setup
+    qs = list(queries) * 2
+    direct_sess = Session(plan, backend="spmd")
+    direct = [direct_sess.execute(q) for q in qs]
+    sess = Session(plan, backend="spmd")
+    door = sess.serve(max_batch=len(qs) + 1, max_delay_ms=10_000.0,
+                      max_queue=len(qs) + 1)
+    if sess.num_sites > 1:
+        assert door.batcher.route_key is not None
+    futs = [door.submit(q, deadline_s=300.0) for q in qs]
+    door.close(drain=True)            # manual mode: drains synchronously
+    served = [f.result(timeout=5.0) for f in futs]
+    for q, a, b in zip(qs, direct, served):
+        assert _answer_set(a) == _answer_set(b), f"diverged on {q.edges}"
+    # the route token never split a shape's bucket ...
+    buckets = {(shape_key(q), sess.route_key(q)) for q in qs}
+    assert len(buckets) == len({shape_key(q) for q in qs})
+    # ... so each shape ran as ONE engine dispatch and every later
+    # member reused the compiled run
+    hits = sess.stats().extra["batch_shape_hits"]
+    assert hits == len(qs) - len(buckets)
+
+
 def test_session_serve_knob_validation(served_setup):
     from repro.core import Session
     plan, _ = served_setup

@@ -146,26 +146,37 @@ def test_smaller_side_bindings_win_on_tiny_binding_table(skew_graph):
 @needs_mesh
 def test_shard_complete_property_skips_every_gather(skew_graph):
     """Every join step on a property replicated across all devices:
-    zero gathers, zero edge ships, comm only from the final result
-    gather -- and with step 0's property also complete, the seeds are
-    decimated across the mesh, so the final gather ships the answer
-    exactly once (not one duplicate per device)."""
+    zero gathers, zero edge ships.  Routed (default), such a
+    fully-replicated query is rendezvous-pinned to ONE device -- no
+    peers, zero comm altogether.  Unrouted (``routing=False``), comm is
+    only the final result gather: step 0's property is complete, so
+    the seeds are decimated across the mesh and the final gather ships
+    the answer exactly once (not one duplicate per device)."""
     g = skew_graph
     rep = np.nonzero(np.asarray(g.p) != 0)[0]      # props 1 and 2 everywhere
     rest = np.nonzero(np.asarray(g.p) == 0)[0]
     sites = [np.unique(np.concatenate([rep, rest[i::4]])) for i in range(4)]
     q = QueryGraph.make([(-1, -2, 2), (-2, -3, 1)])
     want = match_pattern(g, q).num_rows
-    eng = SpmdEngine(g, sites, capacity=4096)
+    routed = SpmdEngine(g, sites, capacity=4096)
+    assert routed.execute(q).num_rows == want
+    rextra = routed.stats().extra
+    assert rextra["routed_queries"] == 1
+    assert rextra["skipped_gathers"] == 1
+    assert rextra["gather_steps"] == 0
+    assert rextra["edge_shipped_steps"] == 0
+    assert routed.stats().comm_bytes == 0
+    # whole-mesh execution restored: decimation across the full mesh,
+    # the final full-width gather at exactly one copy of the answer
+    eng = SpmdEngine(g, sites, capacity=4096, routing=False)
     r = eng.execute(q)
     assert r.num_rows == want
     extra = eng.stats().extra
+    assert extra["routed_queries"] == 0
     assert extra["skipped_gathers"] == 1
     assert extra["gather_steps"] == 0
     assert extra["edge_shipped_steps"] == 0
     assert extra["decimated_seed_queries"] == 1
-    # ledger: only the final full-width gather remains, at exactly one
-    # copy of the answer set (seed decimation partitioned the work)
     m = len(jax.devices())
     assert eng.stats().comm_bytes == (m - 1) * want * (3 * 4 + 1)
     # planner off = the faithful naive baseline: no decimation, every

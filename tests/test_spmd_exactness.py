@@ -38,28 +38,66 @@ def rqueries(rgraph):
 # Differential harness: spmd vs exact host backend, every strategy
 # ----------------------------------------------------------------------
 
-@pytest.mark.parametrize("comm_plan", [True, False],
-                         ids=["planned", "naive"])
+@pytest.mark.parametrize("comm_plan,routing",
+                         [(True, True), (True, False), (False, True)],
+                         ids=["planned-routed", "planned-unrouted",
+                              "naive"])
 @pytest.mark.parametrize("kind", sorted(STRATEGIES.names()))
 def test_spmd_answer_sets_match_host_backend(rgraph, rqueries, kind,
-                                             comm_plan):
+                                             comm_plan, routing):
     """The differential harness, with the size-aware communication
     planner both enabled (ship-smaller-side + shard-complete skip) and
-    disabled (gather binding tables before every join step): answer
-    sets must equal the exact host backend's either way, for every
-    registered strategy."""
+    disabled (gather binding tables before every join step), and the
+    replica router both on (mask non-resident sites, rendezvous seed
+    balancing) and off (whole-mesh execution): answer sets must equal
+    the exact host backend's every way, for every registered strategy.
+    (Routing without the comm plan is inert, so the naive arm only
+    needs one routing setting.)"""
     plan = build_plan(rgraph, Workload(list(rqueries)),
                       PartitionConfig(kind=kind, num_sites=4))
     host_backend = "local" if plan.frag is not None else "baseline"
     host = Session(plan, backend=host_backend)
-    spmd = Session(plan, backend="spmd", spmd_comm_plan=comm_plan)
+    spmd = Session(plan, backend="spmd", spmd_comm_plan=comm_plan,
+                   spmd_routing=routing)
     for q in rqueries:
         rh, rs = host.execute(q), spmd.execute(q)
         vh, sh = _answer_set(rh)
         vs, ss = _answer_set(rs)
         assert vh == vs, f"{kind}: variable sets diverged on {q.edges}"
         assert sh == ss, (f"{kind}: spmd answer set != {host_backend} "
-                          f"on {q.edges} (comm_plan={comm_plan})")
+                          f"on {q.edges} (comm_plan={comm_plan}, "
+                          f"routing={routing})")
+
+
+@pytest.mark.parametrize("mesh_n", [1, 2, 4])
+def test_routed_unrouted_host_triple_parity(rgraph, rqueries, mesh_n):
+    """Routed vs unrouted vs host at 1/2/4 devices: the three answer
+    sets must be identical per query, and -- when neither SPMD arm had
+    to climb the capacity ladder -- the routed ledger must not exceed
+    the whole-mesh ledger (route masking shrinks the peer factor of
+    every shard-incomplete step's collective and of the final gather;
+    shard-complete steps ship nothing either way)."""
+    from repro.launch.mesh import make_host_mesh
+    plan = build_plan(rgraph, Workload(list(rqueries)),
+                      PartitionConfig(kind="vertical", num_sites=4))
+    mesh = make_host_mesh(mesh_n)
+    host = Session(plan, backend="local")
+    routed = Session(plan, backend="spmd", mesh=mesh)
+    unrouted = Session(plan, backend="spmd", mesh=mesh,
+                       spmd_routing=False)
+    for q in rqueries:
+        ah = _answer_set(host.execute(q))
+        ar = _answer_set(routed.execute(q))
+        au = _answer_set(unrouted.execute(q))
+        assert ar == au == ah, f"mesh={mesh_n}: diverged on {q.edges}"
+    rst, ust = routed.stats(), unrouted.stats()
+    if mesh_n > 1:
+        assert rst.extra["routed_queries"] > 0
+    if (rst.extra["capacity_retries"] == 0
+            and ust.extra["capacity_retries"] == 0):
+        assert rst.comm_bytes <= ust.comm_bytes, (
+            f"mesh={mesh_n}: routed ledger {rst.comm_bytes} > "
+            f"whole-mesh {ust.comm_bytes}")
 
 
 def test_spmd_matches_whole_graph_matcher(rgraph, rqueries):
