@@ -1,0 +1,71 @@
+"""Living-plan lifecycle benchmark: serve a drifting query stream
+through an ``AdaptiveEngine`` whose data plane is the SPMD engine, ride
+the hot ``SiteStore`` swap at the drift-triggered re-partition, and
+ingest a graph delta -- reporting (a) zero errors while serving across
+the swap and (b) delta-ship bytes vs. the whole-fragment re-ship a
+naive reload would pay.
+
+Emits CSV rows compatible with paper_benches (``bench,variant,metric,
+value``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (PartitionConfig, build_plan,
+                        generate_drifting_workload, generate_watdiv)
+from repro.online import AdaptiveConfig, AdaptiveEngine, ingest_delta
+
+from .paper_benches import emit
+
+
+def bench_lifecycle() -> None:
+    g = generate_watdiv(5_000, seed=3)
+    wl = generate_drifting_workload(g, [(400, {})], seed=11)
+    plan = build_plan(g, wl, PartitionConfig(kind="vertical", num_sites=4))
+
+    # -- serve through a re-partition on the SPMD data plane ------------
+    eng = AdaptiveEngine(plan, AdaptiveConfig(
+        epoch_len=100, serve_backend="spmd",
+        migration_budget_bytes=2_000_000))
+    stream = generate_drifting_workload(
+        g, [(100, {}), (300, {"S": 12.0})], seed=23).queries
+    errors = 0
+    for q in stream:
+        try:
+            eng.execute(q)
+        except Exception:
+            errors += 1
+    emit("bench_lifecycle", "adaptive_spmd", "queries", float(len(stream)))
+    emit("bench_lifecycle", "adaptive_spmd", "errors", float(errors))
+    emit("bench_lifecycle", "adaptive_spmd", "repartitions",
+         float(eng.num_repartitions))
+    emit("bench_lifecycle", "adaptive_spmd", "store_swaps",
+         float(eng.engine.store_generation))
+    assert errors == 0, "queries failed while serving across the swap"
+    assert eng.num_repartitions >= 1, "drift never fired a re-partition"
+
+    # -- graph-delta ingestion: diffs vs. whole-fragment re-ship --------
+    rng = np.random.default_rng(7)
+    n_add, n_rem = 200, 100
+    add = np.stack([rng.integers(0, g.num_vertices, n_add),
+                    rng.integers(0, g.num_properties, n_add),
+                    rng.integers(0, g.num_vertices, n_add)], axis=1)
+    rem_idx = rng.choice(g.num_edges, n_rem, replace=False)
+    rem = np.stack([g.s[rem_idx], g.p[rem_idx], g.o[rem_idx]], axis=1)
+    g2 = g.apply_delta(added_edges=add, removed_edges=rem)
+    dp = ingest_delta(plan, g2, budget_bytes=10**7)
+    emit("bench_lifecycle", "delta", "shipped_bytes", float(dp.shipped_bytes))
+    emit("bench_lifecycle", "delta", "whole_fragment_bytes",
+         float(dp.whole_bytes))
+    emit("bench_lifecycle", "delta", "ship_ratio",
+         dp.shipped_bytes / max(dp.whole_bytes, 1.0))
+    emit("bench_lifecycle", "delta", "unassigned", float(dp.unassigned))
+    emit("bench_lifecycle", "delta", "makespan_sec", dp.makespan_sec)
+    assert dp.shipped_bytes < dp.whole_bytes, \
+        "delta ingestion must ship strictly fewer bytes than re-shipping " \
+        "every touched fragment whole"
+    assert dp.unassigned == 0
+
+
+ALL = [bench_lifecycle]

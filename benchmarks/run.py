@@ -52,8 +52,8 @@ def main() -> None:
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="quick CI subset (engine-parity regression bench "
-                         "+ telemetry latency bench); implies "
-                         "--skip-roofline")
+                         "+ telemetry latency bench + plan-lifecycle "
+                         "bench); implies --skip-roofline")
     ap.add_argument("--trace", action="store_true",
                     help="enable the process-default span tracer for "
                          "every bench engine")
@@ -76,14 +76,15 @@ def main() -> None:
         from repro.obs.trace import enable_tracing
         tracer = enable_tracing(capacity=4096)
 
-    from . import adaptive, paper_benches
+    from . import adaptive, lifecycle, paper_benches
     from .roofline import bench_roofline
 
     if args.smoke:
         args.skip_roofline = True
-        benches = list(paper_benches.SMOKE)
+        benches = list(paper_benches.SMOKE) + list(lifecycle.ALL)
     else:
-        benches = list(paper_benches.ALL) + list(adaptive.ALL)
+        benches = (list(paper_benches.ALL) + list(adaptive.ALL)
+                   + list(lifecycle.ALL))
 
     timings = {}
     for fn in benches:

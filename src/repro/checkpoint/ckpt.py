@@ -107,6 +107,10 @@ class CheckpointManager:
     """Async checkpointing with bounded queue + keep-last-k retention."""
 
     def __init__(self, directory: str | Path, keep: int = 3):
+        if keep < 1:
+            # keep=0 would slice steps[:-0] -- the empty slice -- in
+            # _gc and silently retain everything instead of nothing
+            raise ValueError(f"keep must be >= 1, got {keep}")
         self.directory = Path(directory)
         self.keep = keep
         self._q: "queue.Queue" = queue.Queue(maxsize=2)
@@ -134,19 +138,33 @@ class CheckpointManager:
         for s in steps[:-self.keep]:
             shutil.rmtree(self.directory / f"step_{s}", ignore_errors=True)
 
+    def _take_err(self) -> Optional[BaseException]:
+        # deliver a stored failure exactly once: re-raising the same
+        # exception object on every later call would poison the manager
+        # permanently after the caller already handled it
+        err, self._err = self._err, None
+        return err
+
     def save_async(self, step: int, tree: Any) -> None:
-        if self._err:
-            raise self._err
+        err = self._take_err()
+        if err is not None:
+            raise err
         # device_get NOW (so training can mutate buffers) but write later
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
         self._q.put((step, host_tree))
 
     def wait(self) -> None:
         self._q.join()
-        if self._err:
-            raise self._err
+        err = self._take_err()
+        if err is not None:
+            raise err
 
     def close(self) -> None:
-        self.wait()
-        self._q.put(None)
-        self._thread.join(timeout=10)
+        # always stop and join the worker, even when a pending async
+        # failure surfaces -- raising before the sentinel is enqueued
+        # would leak the thread
+        try:
+            self.wait()
+        finally:
+            self._q.put(None)
+            self._thread.join(timeout=10)

@@ -43,7 +43,9 @@ from .baselines import (BaselineEngine, BaselineFragmentation,
 from .dictionary import DataDictionary
 from .executor import CostModel, DistributedEngine
 from .fragmentation import (Fragment, Fragmentation, MintermPredicate,
-                            SimplePredicate, build_fragmentation)
+                            SimplePredicate, build_fragmentation,
+                            horizontal_fragmentation,
+                            vertical_fragmentation)
 from .graph import RDFGraph
 from .matching import _PropIndex, match_edge_ids
 from .mining import (FrequentPattern, frequent_properties,
@@ -60,10 +62,22 @@ PLAN_FORMAT_VERSION = 1
 # ----------------------------------------------------------------------
 
 class StrategyRegistry:
-    """Name -> builder(graph, workload, config) -> PartitionPlan."""
+    """Name -> builder(graph, workload, config) -> PartitionPlan.
+
+    A strategy may additionally register a *re-fragmentation hook*
+    (``register_refragment``): how the adaptive loop rebuilds this
+    strategy's fragment set from a live snapshot --
+    ``hook(graph, selected, sample, config, cold_ids, index)`` ->
+    ``Fragmentation``, where ``sample`` is the monitor's raw-query
+    reservoir (minterm predicate mining, §5.2) and ``index`` a shared
+    ``_PropIndex``.  ``online.refragment`` dispatches through the hook
+    table instead of hardcoding kinds, so a newly registered
+    frag-bearing strategy joins the adaptive loop by registering both.
+    """
 
     def __init__(self) -> None:
         self._builders: Dict[str, Callable[..., "PartitionPlan"]] = {}
+        self._refragmenters: Dict[str, Callable[..., Fragmentation]] = {}
 
     def register(self, name: str) -> Callable:
         """Decorator registering a plan builder under ``name`` (making
@@ -73,9 +87,19 @@ class StrategyRegistry:
             return fn
         return deco
 
+    def register_refragment(self, name: str) -> Callable:
+        """Decorator registering a re-fragmentation hook for strategy
+        ``name`` (see class docstring for the hook signature)."""
+        def deco(fn: Callable[..., Fragmentation]) -> Callable:
+            self._refragmenters[name] = fn
+            return fn
+        return deco
+
     def unregister(self, name: str) -> None:
-        """Remove ``name`` from the registry (no-op if absent)."""
+        """Remove ``name`` (builder and any refragment hook) from the
+        registry (no-op if absent)."""
         self._builders.pop(name, None)
+        self._refragmenters.pop(name, None)
 
     def get(self, name: str) -> Callable[..., "PartitionPlan"]:
         """The builder registered under ``name``; raises ``ValueError``
@@ -86,9 +110,26 @@ class StrategyRegistry:
                 f"strategies: {self.names()}")
         return self._builders[name]
 
+    def get_refragment(self, name: str) -> Callable[..., Fragmentation]:
+        """The re-fragmentation hook registered for strategy ``name``;
+        raises ``ValueError`` listing the strategies that *do* carry a
+        hook otherwise (a strategy without one cannot ride the
+        adaptive loop)."""
+        if name not in self._refragmenters:
+            raise ValueError(
+                f"strategy {name!r} has no re-fragmentation hook; "
+                f"strategies with refragment hooks: "
+                f"{self.refragment_names()} (register one with "
+                f"@STRATEGIES.register_refragment({name!r}))")
+        return self._refragmenters[name]
+
     def names(self) -> List[str]:
         """Registered strategy names, sorted."""
         return sorted(self._builders)
+
+    def refragment_names(self) -> List[str]:
+        """Strategy names carrying a re-fragmentation hook, sorted."""
+        return sorted(self._refragmenters)
 
     def __contains__(self, name: str) -> bool:
         return name in self._builders
@@ -96,6 +137,7 @@ class StrategyRegistry:
 
 STRATEGIES = StrategyRegistry()
 register_strategy = STRATEGIES.register
+register_refragment = STRATEGIES.register_refragment
 
 
 # ----------------------------------------------------------------------
@@ -713,6 +755,25 @@ def _horizontal(graph: RDFGraph, workload: Workload,
     return _workload_driven_plan(graph, workload, cfg)
 
 
+@register_refragment("vertical")
+def _vertical_refragment(graph: RDFGraph, selected: List[QueryGraph],
+                         sample: Workload, cfg: PartitionConfig,
+                         cold_ids: np.ndarray, index) -> Fragmentation:
+    return vertical_fragmentation(graph, selected, cold_ids,
+                                  cfg.num_cold_parts, index=index,
+                                  max_rows=cfg.max_rows)
+
+
+@register_refragment("horizontal")
+def _horizontal_refragment(graph: RDFGraph, selected: List[QueryGraph],
+                           sample: Workload, cfg: PartitionConfig,
+                           cold_ids: np.ndarray, index) -> Fragmentation:
+    return horizontal_fragmentation(graph, selected, sample, cold_ids,
+                                    cfg.num_cold_parts,
+                                    cfg.per_pattern_predicates,
+                                    index=index, max_rows=cfg.max_rows)
+
+
 @register_strategy("shape")
 def _shape(graph: RDFGraph, workload: Workload,
            cfg: PartitionConfig) -> PartitionPlan:
@@ -752,7 +813,8 @@ def _warp(graph: RDFGraph, workload: Workload,
 # ----------------------------------------------------------------------
 
 def build_plan(graph: RDFGraph, workload: Workload,
-               config: Optional[PartitionConfig] = None) -> PartitionPlan:
+               config: Optional[PartitionConfig] = None,
+               incumbent: Optional[PartitionPlan] = None) -> PartitionPlan:
     """Run the offline phase with the strategy named by ``config.kind``.
 
     Args:
@@ -761,14 +823,43 @@ def build_plan(graph: RDFGraph, workload: Workload,
             from.
         config: ``PartitionConfig`` (strategy kind, number of sites,
             mining/selection thresholds); defaults to vertical
-            fragmentation over 10 sites.
+            fragmentation over 10 sites, or to the incumbent's config
+            when warm-starting.
+        incumbent: an existing plan to warm-start from.  Its selected
+            FAP set seeds mining/selection (``online.refragment``),
+            so patterns the previous plan materialized are retained
+            when they still pay for themselves on the new workload --
+            the lifecycle layer's successive-version path.
 
     Returns:
         A ``PartitionPlan`` with the graph attached -- ready to serve
         through ``Session`` or to ``save()`` for later ``load()``.
 
     Raises:
-        ValueError: ``config.kind`` names no registered strategy.
+        ValueError: ``config.kind`` names no registered strategy (or,
+            when warm-starting, no refragment hook).
     """
-    cfg = config or PartitionConfig()
-    return STRATEGIES.get(cfg.kind)(graph, workload, cfg)
+    if incumbent is None:
+        cfg = config or PartitionConfig()
+        return STRATEGIES.get(cfg.kind)(graph, workload, cfg)
+
+    cfg = config or incumbent.config
+    # warm start: replay the design workload through a monitor and run
+    # the incremental pipeline seeded with the incumbent's FAP set
+    # (lazy import -- core must not depend on online at module scope)
+    from ..online.monitor import WorkloadMonitor
+    from ..online.refragment import refragment
+    monitor = WorkloadMonitor(graph.num_properties)
+    monitor.bulk_load(workload)
+    res = refragment(graph, monitor, cfg, incumbent.selected_patterns)
+    dictionary = DataDictionary.build(graph, res.frag, res.desired_alloc,
+                                      cfg.num_sites)
+    repl = res.desired_replication
+    return PartitionPlan(
+        strategy=cfg.kind, config=cfg, graph=graph,
+        selected_patterns=res.selected_patterns, frag=res.frag,
+        alloc=res.desired_alloc, dictionary=dictionary,
+        cold_props=res.cold_props, design_workload=workload,
+        sel_usage=res.sel_usage, weights=res.weights,
+        replicated_props=(repl.prop_set if repl is not None else set()),
+        replication=repl)

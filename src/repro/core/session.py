@@ -15,7 +15,9 @@ through the identical ``Engine`` protocol:
                     capacity-doubling retry on overflow);
 * ``"adaptive"`` -- the online ``AdaptiveEngine`` control plane
                     (monitor -> drift -> refragment -> migrate) wrapping
-                    the local engine.
+                    the local engine, or the SPMD engine with hot
+                    ``SiteStore`` swaps at each re-partition via
+                    ``AdaptiveConfig(serve_backend="spmd")``.
 
 Typical use::
 

@@ -1245,8 +1245,8 @@ class SpmdEngine(EngineBase):
         # keyed by exact edge structure (NOT QueryGraph, whose __eq__ is
         # canonical-isomorphism: isomorphic patterns with different edge
         # orders produce different binding-column orders and must not
-        # share a compiled matcher) x capacity tier
-        self._matchers: Dict[Tuple[Tuple, int], object] = {}
+        # share a compiled matcher) x capacity tier x store generation
+        self._matchers: Dict[Tuple[Tuple, int, int], object] = {}
         # per-pattern static communication specs (planner output)
         self._comm_specs: Dict[Tuple, Tuple[StepComm, ...]] = {}
         # per-pattern seed-decimation decision (store + planner mode are
@@ -1257,6 +1257,11 @@ class SpmdEngine(EngineBase):
         # re-climbing (and re-executing) every lower tier
         self._cap_hints: Dict[Tuple, int] = {}
         self._compiles = 0
+        # bumped by swap_store: matcher cache entries are keyed by store
+        # generation (a matcher closes over comm specs / routes planned
+        # against one store's residency), and the serving layer reads it
+        # to observe hot swaps
+        self._store_gen = 0
         # batch-level shape sharing (_execute_batch): while a group of
         # same-normalized-shape queries executes, the first member's
         # device run is parked here and every later member reuses it
@@ -1274,6 +1279,7 @@ class SpmdEngine(EngineBase):
         self._bump("decimated_seed_queries", 0)
         self._bump("routed_queries", 0)
         self._bump("route_skipped_steps", 0)
+        self._bump("store_swaps", 0)
 
     @property
     def num_sites(self) -> int:
@@ -1346,7 +1352,7 @@ class SpmdEngine(EngineBase):
         return cap
 
     def _matcher(self, pattern: QueryGraph, capacity: int):
-        key = (pattern.edges, capacity)
+        key = (pattern.edges, capacity, self._store_gen)
         fn = self._matchers.get(key)
         if fn is None:
             use_csr = self.store.csr_arrays() is not None
@@ -1602,6 +1608,59 @@ class SpmdEngine(EngineBase):
                 self._shared_run = None
         return out
 
+    @property
+    def store_generation(self) -> int:
+        """Monotonic counter bumped by every ``swap_store`` -- the
+        serving layer's witness that a hot swap happened."""
+        return self._store_gen
+
+    def swap_store(self, site_edge_ids: Sequence[np.ndarray],
+                   replicated_props: Optional[set] = None,
+                   graph: Optional[RDFGraph] = None) -> int:
+        """Atomically replace the folded ``SiteStore`` with one built
+        for a new placement (and optionally a delta-updated graph) --
+        the adaptive loop's hot-swap path: the engine object, its mesh,
+        and its jit machinery survive a re-partition, so a serving
+        front door keeps the same engine handle across plan versions.
+
+        The new store is built *before* any engine state changes, then
+        installed together with the planner caches' invalidation in one
+        host-side step -- the engine is single-threaded per the Engine
+        protocol, so an execute either runs entirely on the old store
+        or entirely on the new one, never a mix.  Compiled matchers are
+        keyed by store generation: entries for the old store stay in
+        the cache (they are closed over retired comm specs, never
+        matched again), while shapes re-planned against the new
+        residency compile fresh on first use.
+
+        Returns the new store generation.
+        """
+        if graph is not None:
+            self.graph = graph
+        m = int(np.prod(self.mesh.devices.shape))
+        folded: List[List[np.ndarray]] = [[] for _ in range(m)]
+        for j, eids in enumerate(site_edge_ids):
+            folded[j % m].append(np.asarray(eids, np.int64))
+        store = SiteStore.build(
+            self.graph, [np.unique(np.concatenate(g)) if g
+                         else np.zeros(0, np.int64) for g in folded])
+        # install: everything planned against the old store's residency
+        # (routes, comm specs, seed decimation, capacity hints) is
+        # invalid for the new placement
+        self.store = store
+        self.logical_sites = len(site_edge_ids)
+        if replicated_props is not None:
+            self.replicated_props = set(replicated_props)
+        self._routes.clear()
+        self._comm_specs.clear()
+        self._seed_decim.clear()
+        self._cap_hints.clear()
+        self._shared_run = None
+        self._shared_run_key = None
+        self._store_gen += 1
+        self._bump("store_swaps")
+        return self._store_gen
+
     def route_key(self, query: QueryGraph) -> Optional[Tuple[int, ...]]:
         """Stable routing token for ``query``: its route's member
         devices, or ``None`` when routing is inactive (or the query is
@@ -1615,6 +1674,7 @@ class SpmdEngine(EngineBase):
 
     def _stats_extra(self) -> Dict[str, float]:
         return {"compiled_shapes": float(self._compiles),
+                "store_generation": float(self._store_gen),
                 "devices": float(self.store.num_sites),
                 "comm_planner": float(self.comm_plan),
                 "routing": float(bool(self.routing and self.comm_plan

@@ -12,8 +12,12 @@ cooldown has passed), the engine
 2. plans a cost-bounded migration realizing the new allocation within
    ``migration_budget_bytes`` (``online.migration``), scheduling the
    shipment through the straggler-aware work queue;
-3. swaps in a fresh ``DistributedEngine`` over the new fragmentation at
-   the *realized* (post-budget) placement.
+3. swaps in the new fragmentation at the *realized* (post-budget)
+   placement: a fresh ``DistributedEngine`` on the default local data
+   plane, or -- with ``AdaptiveConfig(serve_backend="spmd")`` -- a hot
+   ``SiteStore`` swap into the *running* ``SpmdEngine``
+   (``SpmdEngine.swap_store``), so SPMD serving continues through the
+   re-partition without an engine restart.
 
 Every epoch is accounted: shipped query bytes, response time, migrated
 bytes, migration makespan -- the before/after communication-cost ledger
@@ -51,6 +55,14 @@ class AdaptiveConfig:
     and ``cooldown_epochs`` have passed since the last re-partition.
     Each migration ships at most ``migration_budget_bytes``
     (``bytes_per_edge`` per edge) over ``link_bytes_per_sec`` links.
+
+    ``serve_backend`` picks the data plane under the control loop:
+    ``"local"`` (default) answers on the exact host
+    ``DistributedEngine`` (rebuilt at each re-partition); ``"spmd"``
+    answers on a jit/shard_map ``SpmdEngine`` whose folded ``SiteStore``
+    is *hot-swapped* in place at each re-partition -- same engine
+    object, same jit machinery, no restart (the lifecycle layer's
+    serve-through-a-repartition path).
     """
     epoch_len: int = 200                  # queries per epoch
     decay: float = 0.995                  # monitor half-life ~ 138 queries
@@ -62,6 +74,13 @@ class AdaptiveConfig:
     migration_budget_bytes: int = 4_000_000
     bytes_per_edge: float = BYTES_PER_EDGE
     link_bytes_per_sec: float = 1.0e9
+    serve_backend: str = "local"          # "local" | "spmd"
+
+    def __post_init__(self) -> None:
+        if self.serve_backend not in ("local", "spmd"):
+            raise ValueError(
+                f"serve_backend must be 'local' or 'spmd', got "
+                f"{self.serve_backend!r}")
 
 
 @dataclasses.dataclass
@@ -132,7 +151,10 @@ class AdaptiveEngine(EngineBase):
         # it is kept current so the adapted placement can be served by
         # an SPMD rebuild -- the ROADMAP's adaptive-SPMD open item.
         self.replicated_props: Set[int] = set(plan.replicated_props)
-        self.engine = plan.build_local_engine(cost)
+        if self.cfg.serve_backend == "spmd":
+            self.engine = plan.build_spmd_engine(cost=cost)
+        else:
+            self.engine = plan.build_local_engine(cost)
 
         self.monitor = WorkloadMonitor(self.graph.num_properties,
                                        decay=self.cfg.decay,
@@ -188,7 +210,9 @@ class AdaptiveEngine(EngineBase):
     def dict(self) -> DataDictionary:
         """Data dictionary of the *current* fragmentation (legacy
         attribute surface; swaps on re-partition)."""
-        return self.engine.dict
+        if hasattr(self.engine, "dict"):
+            return self.engine.dict
+        return self.plan.dictionary       # SPMD data plane
 
     @property
     def num_sites(self) -> int:
@@ -301,10 +325,33 @@ class AdaptiveEngine(EngineBase):
         self.selected_patterns = res.selected_patterns
         self.cold_props = res.cold_props
         self.replicated_props = set(plan.replicated_props)
-        self.engine = DistributedEngine(self.graph, res.frag, realized,
-                                        dictionary, res.cold_props,
-                                        self.cost)
-        self._install_hook()
+        # refresh the plan *artifact* to the realized placement: the
+        # lifecycle layer publishes successive versions of it, and both
+        # data planes derive their storage view from its
+        # ``site_edge_ids``.  The design workload carries over from the
+        # incumbent (provenance: what the original fragmentation was
+        # designed from; the live distribution lives in the monitor).
+        self.plan = PartitionPlan(
+            strategy=self.pcfg.kind, config=self.pcfg, graph=self.graph,
+            selected_patterns=res.selected_patterns, frag=res.frag,
+            alloc=realized, dictionary=dictionary,
+            cold_props=res.cold_props,
+            design_workload=self.plan.design_workload,
+            sel_usage=res.sel_usage, weights=res.weights,
+            replicated_props=set(plan.replicated_props),
+            replication=res.desired_replication)
+        if self.cfg.serve_backend == "spmd":
+            # hot swap: same engine object (jit machinery, telemetry
+            # streams, and the monitor hook survive -- re-installing the
+            # hook here would double-observe every query), new folded
+            # store for the realized placement
+            self.engine.swap_store(self.plan.site_edge_ids(),
+                                   replicated_props=self.replicated_props)
+        else:
+            self.engine = DistributedEngine(self.graph, res.frag, realized,
+                                            dictionary, res.cold_props,
+                                            self.cost)
+            self._install_hook()
         self.detector.set_reference(self.monitor, self.selected_patterns)
         self.total_moved_bytes += plan.moved_bytes
         self.total_replica_bytes += plan.replica_bytes

@@ -25,12 +25,28 @@ masses renormalize in O(capacity) only when the scale risks overflow
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, List, Tuple
 
 import numpy as np
 
 from ..core.query import QueryGraph
 from ..core.workload import Workload
+
+
+def sketch_key(code: Tuple, seed: int = 0) -> int:
+    """Stable int64 sketch key for a canonical DFS code.
+
+    Seeded blake2b (the same construction ``core.routing`` uses for
+    rendezvous hashing) -- NOT Python's ``hash()``, which is salted per
+    process (PYTHONHASHSEED): monitor state serialized by the plan
+    lifecycle layer must round-trip across restarts, and a salted key
+    would silently lose every evicted shape's sketch mass on
+    re-admission in the new process.
+    """
+    digest = hashlib.blake2b(f"{seed}|{code!r}".encode(),
+                             digest_size=8).digest()
+    return int.from_bytes(digest, "big", signed=True)
 
 
 class CountMinSketch:
@@ -124,7 +140,7 @@ class WorkloadMonitor:
             stat.mass += u
         else:
             # re-admit with whatever mass the sketch remembers (0 if new)
-            base = self.sketch.estimate(hash(code))
+            base = self.sketch.estimate(sketch_key(code))
             self.shapes[code] = _ShapeStat(norm, base + u, base)
             if len(self.shapes) > self.capacity:
                 self._evict()
@@ -151,7 +167,8 @@ class WorkloadMonitor:
     # ------------------------------------------------------------------
     def _evict(self) -> None:
         code, stat = min(self.shapes.items(), key=lambda kv: kv[1].mass)
-        self.sketch.add(hash(code), max(stat.mass - stat.sketch_base, 0.0))
+        self.sketch.add(sketch_key(code),
+                        max(stat.mass - stat.sketch_base, 0.0))
         del self.shapes[code]
 
     def _reservoir_add(self, query: QueryGraph) -> None:
@@ -243,3 +260,74 @@ class WorkloadMonitor:
         """Recency-biased raw-query sample (constants intact) for §5.2
         minterm predicate mining during re-fragmentation."""
         return Workload(list(self.reservoir))
+
+    # ------------------------------------------------------------------
+    # state round-trip (plan lifecycle layer: the monitor restarts with
+    # the serving process, not from scratch)
+    # ------------------------------------------------------------------
+    def state(self) -> Dict[str, np.ndarray]:
+        """Checkpoint-friendly snapshot: flat numpy arrays only, so it
+        rides ``repro.checkpoint`` as one more pytree.  Everything the
+        decayed statistics need round-trips -- shape table, sketch
+        (table + multipliers; keys are the stable ``sketch_key``
+        digests, so a restored process re-admits evicted-shape mass),
+        property/site masses, reservoir, and the decay unit.  The
+        reservoir-replacement RNG restarts fresh (sampling noise, not
+        state)."""
+        from ..core.plan import encode_queries
+        items = list(self.shapes.items())
+        site_ids = np.asarray(sorted(self.site_mass), np.int64)
+        return {
+            "meta": np.asarray(
+                [self.decay, float(self.capacity),
+                 float(self.num_properties), float(self.reservoir_size),
+                 self.total_mass, float(self.queries_seen), self._unit,
+                 float(self.sketch.depth)], np.float64),
+            "shape_reps": encode_queries([st.rep for _, st in items]),
+            "shape_mass": np.asarray([st.mass for _, st in items],
+                                     np.float64),
+            "shape_base": np.asarray([st.sketch_base for _, st in items],
+                                     np.float64),
+            "sketch_table": np.asarray(self.sketch.table, np.float64),
+            "sketch_a": np.asarray(self.sketch._a, np.int64),
+            "edge_prop_mass": np.asarray(self.edge_prop_mass, np.float64),
+            "query_prop_mass": np.asarray(self.query_prop_mass, np.float64),
+            "site_ids": site_ids,
+            "site_mass": np.asarray(
+                [self.site_mass[int(j)] for j in site_ids], np.float64),
+            "reservoir": encode_queries(self.reservoir),
+        }
+
+    @classmethod
+    def from_state(cls, arrays: Dict[str, np.ndarray]) -> "WorkloadMonitor":
+        """Rebuild a monitor from ``state()`` output (possibly in a
+        different process: sketch keys are process-stable digests, so
+        evicted-shape mass survives the restart)."""
+        from ..core.plan import decode_queries
+        meta = np.asarray(arrays["meta"], np.float64)
+        table = np.asarray(arrays["sketch_table"], np.float64)
+        m = cls(num_properties=int(meta[2]), decay=float(meta[0]),
+                capacity=int(meta[1]), reservoir_size=int(meta[3]),
+                sketch_width=int(table.shape[1]))
+        m.sketch.depth = int(meta[7])
+        m.sketch.table = table.copy()
+        m.sketch._a = np.asarray(arrays["sketch_a"], np.int64).copy()
+        reps = decode_queries(np.asarray(arrays["shape_reps"], np.int64))
+        mass = np.asarray(arrays["shape_mass"], np.float64)
+        base = np.asarray(arrays["shape_base"], np.float64)
+        m.shapes = {rep.canonical_code(): _ShapeStat(rep, float(mv),
+                                                     float(bv))
+                    for rep, mv, bv in zip(reps, mass, base)}
+        m.edge_prop_mass = np.asarray(arrays["edge_prop_mass"],
+                                      np.float64).copy()
+        m.query_prop_mass = np.asarray(arrays["query_prop_mass"],
+                                       np.float64).copy()
+        m.site_mass = {int(j): float(v)
+                       for j, v in zip(arrays["site_ids"],
+                                       arrays["site_mass"])}
+        m.reservoir = decode_queries(np.asarray(arrays["reservoir"],
+                                                np.int64))
+        m.total_mass = float(meta[4])
+        m.queries_seen = int(meta[5])
+        m._unit = float(meta[6])
+        return m

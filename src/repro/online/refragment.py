@@ -34,13 +34,12 @@ import numpy as np
 from ..core.allocation import (Allocation, ReplicationPlan,
                                allocate_fragments, plan_replication,
                                workload_property_heat)
-from ..core.fragmentation import (Fragmentation, horizontal_fragmentation,
-                                  vertical_fragmentation)
+from ..core.fragmentation import Fragmentation
 from ..core.graph import RDFGraph
 from ..core.matching import _PropIndex, match_edge_ids
 from ..core.mining import (FrequentPattern, mine_frequent_patterns_deduped,
                            usage_matrix)
-from ..core.plan import PartitionConfig
+from ..core.plan import STRATEGIES, PartitionConfig
 from ..core.query import QueryGraph, is_subgraph_of
 from ..core.selection import select_patterns
 from .monitor import WorkloadMonitor
@@ -140,18 +139,11 @@ def refragment(graph: RDFGraph, monitor: WorkloadMonitor,
                if p.canonical_code() in {q.canonical_code()
                                          for q in incumbent_patterns})
 
-    # --- fragment (§5) on the live hot/cold split ---
-    if cfg.kind == "vertical":
-        frag = vertical_fragmentation(graph, selected, cold_ids,
-                                      cfg.num_cold_parts, index=idx,
-                                      max_rows=cfg.max_rows)
-    elif cfg.kind == "horizontal":
-        frag = horizontal_fragmentation(
-            graph, selected, monitor.raw_sample(), cold_ids,
-            cfg.num_cold_parts, cfg.per_pattern_predicates, index=idx,
-            max_rows=cfg.max_rows)
-    else:
-        raise ValueError(f"unknown fragmentation kind: {cfg.kind}")
+    # --- fragment (§5) on the live hot/cold split, dispatched through
+    # the strategy registry's refragment hooks so registered strategies
+    # join the adaptive loop without this module hardcoding kinds ---
+    frag = STRATEGIES.get_refragment(cfg.kind)(
+        graph, selected, monitor.raw_sample(), cfg, cold_ids, idx)
 
     # --- allocate (§6): desired placement, pre-budget; the data
     # dictionary is built by the caller against the *realized*

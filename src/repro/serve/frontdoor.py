@@ -326,6 +326,13 @@ class FrontDoor:
         self._inflight = 0
         self._thread: Optional[threading.Thread] = None
         self._stopping = False
+        # engine cut-over requests (plan lifecycle hot swap): callables
+        # the dispatcher runs *between* batch dispatches -- the only
+        # point where no engine call is in flight, so a swap never
+        # races a running execute_many.  Plain attribute counter, not a
+        # serve metric (REQUIRED_SERVE_METRICS is a closed set).
+        self._pending_swaps: List[Any] = []
+        self.swaps_applied = 0
         # -- telemetry: pre-register every serve series so snapshots
         # expose them before the first request (REQUIRED_SERVE_METRICS)
         self._counters: Dict[str, Any] = {}
@@ -406,11 +413,35 @@ class FrontDoor:
         with the dispatcher thread running (``start=True``)."""
         return self.submit(query, deadline_s).result(timeout)
 
+    # -- engine cut-over (plan lifecycle) ------------------------------
+    def request_swap(self, fn) -> None:
+        """Enqueue an engine cut-over to run on the dispatcher thread
+        between batch dispatches (e.g. ``lambda: engine.swap_store(...)``
+        or rebinding ``self.engine`` entirely via a callable that
+        mutates it).  In-flight requests finish on the old engine
+        state; every batch dispatched after the swap is applied runs on
+        the new one.  Thread-safe; with a running dispatcher the swap
+        applies promptly, in manual-pump mode at the next ``pump()`` /
+        ``drain()``."""
+        with self._cond:
+            self._pending_swaps.append(fn)
+            self._cond.notify()
+
+    def _apply_swaps(self) -> None:
+        """Run queued cut-overs (dispatcher context only: callers of
+        ``pump``/``drain`` own the engine's single thread)."""
+        with self._cond:
+            swaps, self._pending_swaps = self._pending_swaps, []
+        for fn in swaps:
+            fn()
+            self.swaps_applied += 1
+
     # -- dispatch ------------------------------------------------------
     def pump(self, now: Optional[float] = None) -> int:
         """Dispatch every batch due at ``now`` (manual-pump mode; the
         dispatcher thread calls the same path).  Returns the number of
         batches executed."""
+        self._apply_swaps()
         now = self.clock() if now is None else now
         with self._cond:
             batches = self.batcher.take_ready(now)
@@ -423,6 +454,7 @@ class FrontDoor:
     def drain(self) -> int:
         """Flush and dispatch everything still queued, due or not.
         Returns the number of batches executed."""
+        self._apply_swaps()
         with self._cond:
             batches = self.batcher.flush_all()
             self._inflight += sum(len(b.requests) for b in batches)
@@ -573,12 +605,16 @@ class FrontDoor:
                     return
                 now = self.clock()
                 due = self.batcher.next_due()
-                if due is None:
-                    self._cond.wait()
-                    continue
-                if due > now:
-                    self._cond.wait(timeout=due - now)
-                    continue
+                # a pending engine cut-over falls through to pump()
+                # even with nothing due -- request_swap's notify woke
+                # this thread precisely to apply it
+                if not self._pending_swaps:
+                    if due is None:
+                        self._cond.wait()
+                        continue
+                    if due > now:
+                        self._cond.wait(timeout=due - now)
+                        continue
             self.pump()
 
     def close(self, drain: bool = True) -> None:

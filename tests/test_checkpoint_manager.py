@@ -1,0 +1,96 @@
+"""CheckpointManager lifecycle regressions: keep-last-k validation, the
+always-join close() contract, and one-shot async error delivery.
+
+Three historical bugs, each with a failing-first test here:
+
+* ``keep=0`` sliced ``steps[:-0]`` (the empty slice) in ``_gc`` and
+  silently retained every checkpoint -- the opposite of what the
+  caller asked for.  Now rejected at construction.
+* ``close()`` called ``wait()`` *before* enqueuing the worker's stop
+  sentinel, so a failed async save raised out of ``close()`` and
+  leaked the worker thread forever.
+* a failed save's exception object was re-raised on every subsequent
+  ``save_async`` call, so one transient disk error poisoned the
+  manager permanently even after the caller handled it.
+"""
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import CheckpointManager, latest_step
+
+
+def _tree(step):
+    return {"w": np.full(4, step, np.int64)}
+
+
+def test_keep_zero_rejected(tmp_path):
+    with pytest.raises(ValueError, match="keep"):
+        CheckpointManager(tmp_path, keep=0)
+    with pytest.raises(ValueError, match="keep"):
+        CheckpointManager(tmp_path, keep=-3)
+
+
+def test_gc_retains_exactly_keep(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for step in range(5):
+        mgr.save_async(step, _tree(step))
+    mgr.wait()
+    kept = sorted(int(p.name.split("_")[1])
+                  for p in tmp_path.glob("step_*"))
+    assert kept == [3, 4]
+    assert latest_step(tmp_path) == 4
+    mgr.close()
+
+
+def test_failed_save_raises_once_then_clears(tmp_path):
+    # a *file* where the checkpoint directory should be makes every
+    # save fail (mkdir on a file path)
+    target = tmp_path / "ckpts"
+    target.write_text("not a directory")
+    mgr = CheckpointManager(target, keep=1)
+    mgr.save_async(0, _tree(0))
+    with pytest.raises(OSError):
+        mgr.wait()
+    # the stored error was delivered; the next call must NOT re-raise
+    # the same stale exception object
+    mgr.save_async(1, _tree(1))
+    with pytest.raises(OSError):
+        mgr.wait()
+    mgr.close()
+
+
+def test_save_async_raises_pending_error_once(tmp_path):
+    target = tmp_path / "ckpts"
+    target.write_text("not a directory")
+    mgr = CheckpointManager(target, keep=1)
+    mgr.save_async(0, _tree(0))
+    mgr._q.join()                 # let the failure land without raising
+    with pytest.raises(OSError):
+        mgr.save_async(1, _tree(1))
+    # error delivered exactly once: this enqueue must go through
+    mgr.save_async(2, _tree(2))
+    with pytest.raises(OSError):
+        mgr.wait()
+    mgr.close()
+
+
+def test_close_joins_worker_after_failure(tmp_path):
+    """close() must terminate the worker thread even when a pending
+    async failure surfaces -- the old order (wait first, sentinel
+    second) leaked the thread."""
+    target = tmp_path / "ckpts"
+    target.write_text("not a directory")
+    mgr = CheckpointManager(target, keep=1)
+    mgr.save_async(0, _tree(0))
+    with pytest.raises(OSError):
+        mgr.close()
+    mgr._thread.join(timeout=10)
+    assert not mgr._thread.is_alive()
+
+
+def test_close_clean_path(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save_async(7, _tree(7))
+    mgr.close()
+    assert not mgr._thread.is_alive()
+    assert latest_step(tmp_path) == 7

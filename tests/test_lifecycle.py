@@ -1,0 +1,251 @@
+"""Plan lifecycle end-to-end: serving through a re-partition on the
+SPMD backend, versioned plan publication, and graph-delta ingestion.
+
+The flagship harness drives a drifting query stream through an
+``AdaptiveEngine`` whose data plane is the jit/shard_map ``SpmdEngine``
+until drift fires a re-partition, and asserts
+
+* answer-set equality against whole-graph ``match_pattern`` for every
+  query -- before, during (the query whose epoch boundary triggers the
+  swap), and after the hot ``SiteStore`` swap, at whatever device
+  count the suite runs (CI: 1, 2 and 4);
+* the SPMD trace <-> comm-ledger delta stays exactly 0 across the
+  swap: the per-step records of every traced query sum to its ledger
+  bytes on both the old and the new store generation.
+
+The serving cut-over test drives a manual-pump ``FrontDoor`` through
+``request_swap`` and checks in-flight batches finish while every batch
+dispatched after the swap runs on the new store.
+"""
+import numpy as np
+import pytest
+
+from generators import answer_set
+from repro.core import (PartitionConfig, build_plan,
+                        generate_drifting_workload, generate_watdiv)
+from repro.core.matching import match_pattern
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
+from repro.online import (AdaptiveConfig, AdaptiveEngine, PlanRepository,
+                          WorkloadMonitor, ingest_delta)
+from repro.serve import FrontDoor, FrontDoorConfig
+
+
+@pytest.fixture(scope="module")
+def lifecycle_setup():
+    g = generate_watdiv(3_000, seed=3)
+    wl = generate_drifting_workload(g, [(300, {})], seed=11)
+    plan = build_plan(g, wl, PartitionConfig(kind="vertical", num_sites=4))
+    return g, wl, plan
+
+
+def _drifting_stream(g, seed=23):
+    return generate_drifting_workload(
+        g, [(100, {}), (300, {"S": 12.0})], seed=seed).queries
+
+
+# ----------------------------------------------------------------------
+# Adaptive over SPMD: parity through the hot swap
+# ----------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_adaptive_spmd_parity_through_repartition(lifecycle_setup):
+    g, wl, plan = lifecycle_setup
+    tracer = Tracer(enabled=True, capacity=8)
+    eng = AdaptiveEngine(plan, AdaptiveConfig(
+        epoch_len=100, serve_backend="spmd",
+        migration_budget_bytes=2_000_000))
+    eng.set_tracer(tracer)
+    eng.set_metrics_registry(MetricsRegistry())
+    spmd = eng.engine
+    gen_seen = {0}
+    for q in _drifting_stream(g):
+        before_comm = spmd.stats().comm_bytes
+        r = eng.execute(q)
+        # exactness vs the whole-graph oracle at every store generation
+        assert answer_set(r) == answer_set(match_pattern(g, q))
+        # trace <-> ledger delta stays 0 across the swap: the traced
+        # step bytes of this query sum exactly to its ledger delta
+        delta = spmd.stats().comm_bytes - before_comm
+        root = tracer.store.spans()[-1]
+        assert root.attrs["backend"] == "adaptive"
+        recs = [rec for s in root.walk() for rec in s.records
+                if rec["kind"] == "comm_step"]
+        assert sum(rec["bytes"] for rec in recs) == delta
+        gen_seen.add(spmd.store_generation)
+    assert eng.num_repartitions >= 1
+    # the data plane survived the re-partition: same engine object,
+    # bumped store generation, swap counted in the stats
+    assert eng.engine is spmd
+    assert spmd.store_generation >= 1 and len(gen_seen) >= 2
+    assert spmd.stats().extra["store_swaps"] == spmd.store_generation
+    # the refreshed plan artifact matches the live engine state
+    assert eng.plan.frag is eng.frag
+    assert set(eng.plan.replicated_props) == eng.replicated_props
+
+
+@pytest.mark.slow
+def test_frontdoor_serves_across_requested_swap(lifecycle_setup):
+    """Manual-pump cut-over: batches pumped before the swap run on the
+    old store, the swap applies between dispatches, batches pumped
+    after run on the new store -- every answer exact throughout."""
+    g, wl, plan = lifecycle_setup
+    spmd = plan.build_spmd_engine()
+    door = FrontDoor(spmd, FrontDoorConfig(max_queue=64, max_batch=4),
+                     start=False, registry=MetricsRegistry())
+    queries = wl.queries[:8]
+    futs = [door.submit(q) for q in queries[:4]]
+    door.drain()
+
+    sids = plan.site_edge_ids()
+    door.request_swap(lambda: spmd.swap_store(
+        sids[1:] + sids[:1], replicated_props=set(plan.replicated_props)))
+    # the swap is queued, not applied: dispatch context only
+    assert spmd.store_generation == 0 and door.swaps_applied == 0
+    futs += [door.submit(q) for q in queries[4:]]
+    door.drain()
+    assert door.swaps_applied == 1 and spmd.store_generation == 1
+    for q, f in zip(queries, futs):
+        assert f.outcome == "completed"
+        assert answer_set(f.result()) == answer_set(match_pattern(g, q))
+    assert door.stats()["failed"] == 0
+
+
+# ----------------------------------------------------------------------
+# Plan repository
+# ----------------------------------------------------------------------
+
+def test_plan_repository_publish_load_provenance(lifecycle_setup, tmp_path):
+    g, wl, plan = lifecycle_setup
+    repo = PlanRepository(tmp_path / "repo")
+    assert repo.latest() is None
+    with pytest.raises(FileNotFoundError):
+        repo.load_latest(g)
+
+    mon = WorkloadMonitor(g.num_properties)
+    mon.bulk_load(wl)
+    v1 = repo.publish(plan, monitor=mon, reason="initial build")
+    assert v1 == 1 and repo.versions() == [1]
+    prov = repo.provenance(v1)
+    assert prov["parent"] is None and prov["reason"] == "initial build"
+    assert prov["strategy"] == plan.strategy
+
+    loaded = repo.load_version(v1, g)
+    assert len(loaded.frag.fragments) == len(plan.frag.fragments)
+    assert ([p.canonical_code() for p in loaded.selected_patterns]
+            == [p.canonical_code() for p in plan.selected_patterns])
+    # a wrong graph is rejected by the plan loader's signature check
+    with pytest.raises(ValueError, match="different graph"):
+        repo.load_version(v1, generate_watdiv(1_000, seed=9))
+
+    # monitor state resumes with identical statistics
+    mon2 = repo.load_monitor(v1)
+    assert np.allclose(mon.property_distribution(),
+                       mon2.property_distribution())
+    u1, w1 = mon.snapshot()
+    u2, w2 = mon2.snapshot()
+    assert np.array_equal(w1, w2)
+
+    # warm-started rebuild publishes as a provenance-chained child
+    warm = build_plan(g, wl, plan.config, incumbent=repo.load_latest(g))
+    v2 = repo.publish(warm, reason="warm rebuild")
+    assert v2 == 2 and repo.provenance(v2)["parent"] == v1
+    assert repo.latest() == 2
+    # the warm start retained incumbent patterns (integrity seeds stay
+    # hot under the same workload)
+    inc = {p.canonical_code() for p in plan.selected_patterns}
+    new = {p.canonical_code() for p in warm.selected_patterns}
+    assert inc & new
+
+
+def test_plan_repository_monitor_optional(lifecycle_setup, tmp_path):
+    g, wl, plan = lifecycle_setup
+    repo = PlanRepository(tmp_path / "repo")
+    v = repo.publish(plan)
+    with pytest.raises(FileNotFoundError, match="monitor"):
+        repo.load_monitor(v)
+
+
+# ----------------------------------------------------------------------
+# Graph-delta ingestion
+# ----------------------------------------------------------------------
+
+def _delta(g, n_add=50, n_remove=30, seed=7):
+    rng = np.random.default_rng(seed)
+    add = np.stack([rng.integers(0, g.num_vertices, n_add),
+                    rng.integers(0, g.num_properties, n_add),
+                    rng.integers(0, g.num_vertices, n_add)], axis=1)
+    rem_idx = rng.choice(g.num_edges, n_remove, replace=False)
+    rem = np.stack([g.s[rem_idx], g.p[rem_idx], g.o[rem_idx]], axis=1)
+    return add, rem
+
+
+def test_apply_delta_set_semantics(lifecycle_setup):
+    g, _, _ = lifecycle_setup
+    add, rem = _delta(g)
+    g2 = g.apply_delta(added_edges=add, removed_edges=rem)
+    # removals by value, additions deduped: |E'| = |E| - removed + fresh
+    assert g2.num_edges < g.num_edges + len(add)
+    assert g2.num_edges > g.num_edges - len(rem)
+    # re-adding resident triples is a no-op (RDF set semantics)
+    g3 = g2.apply_delta(added_edges=add)
+    assert g3.num_edges == g2.num_edges
+    # removing then re-adding round-trips the edge count
+    tri = (int(g2.s[0]), int(g2.p[0]), int(g2.o[0]))
+    g4 = g2.apply_delta(removed_edges=[tri]).apply_delta(added_edges=[tri])
+    assert g4.num_edges == g2.num_edges
+    # the property universe is fixed plan state
+    with pytest.raises(ValueError, match="property"):
+        g.apply_delta(added_edges=[(0, g.num_properties, 0)])
+
+
+def test_ingest_delta_ships_diffs_not_fragments(lifecycle_setup):
+    g, wl, plan = lifecycle_setup
+    add, rem = _delta(g)
+    g2 = g.apply_delta(added_edges=add, removed_edges=rem)
+    dp = ingest_delta(plan, g2, budget_bytes=10**6)
+    assert dp.added_edges > 0 and dp.removed_edges > 0
+    assert dp.unassigned == 0
+    # the point of the exercise: edge diffs, never whole fragments
+    assert dp.shipped_bytes < dp.whole_bytes
+    assert dp.migration.moved_bytes == dp.shipped_bytes
+    assert all(mv.mandatory for mv in dp.migration.applied)
+    assert dp.makespan_sec > 0.0
+    # the rebuilt plan covers the new graph at the same placement
+    assert dp.plan.graph is g2
+    assert dp.plan.frag.coverage_ok(g2)
+    assert np.array_equal(dp.plan.alloc.site_of, plan.alloc.site_of)
+    # every delta names a real diff on a fragment's owning site
+    for d in dp.deltas:
+        assert d.added.size + d.removed > 0
+        assert 0 <= d.site < plan.config.num_sites
+
+
+@pytest.mark.slow
+def test_ingest_delta_served_through_hot_swap(lifecycle_setup):
+    """The delta-ingestion serve path: swap the rebuilt plan's storage
+    (and the new graph) into a running SPMD engine, answers exact on
+    the new graph for queries probing both surviving and added
+    edges."""
+    g, wl, plan = lifecycle_setup
+    add, rem = _delta(g)
+    g2 = g.apply_delta(added_edges=add, removed_edges=rem)
+    dp = ingest_delta(plan, g2, budget_bytes=10**6)
+    eng = plan.build_spmd_engine()
+    probes = wl.queries[:6]
+    pre = [answer_set(eng.execute(q)) for q in probes]
+    assert pre == [answer_set(match_pattern(g, q)) for q in probes]
+    eng.swap_store(dp.plan.site_edge_ids(),
+                   replicated_props=set(dp.plan.replicated_props),
+                   graph=g2)
+    for q in probes:
+        assert answer_set(eng.execute(q)) == answer_set(
+            match_pattern(g2, q))
+
+
+def test_ingest_delta_empty_delta_is_noop(lifecycle_setup):
+    g, _, plan = lifecycle_setup
+    dp = ingest_delta(plan, g.apply_delta())
+    assert dp.added_edges == 0 and dp.removed_edges == 0
+    assert dp.shipped_bytes == 0 and not dp.deltas
+    assert dp.plan.frag.coverage_ok(dp.plan.graph)

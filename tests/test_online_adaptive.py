@@ -69,6 +69,76 @@ def test_monitor_hot_properties_tracks_mass():
     assert 2 in hot and 5 not in hot
 
 
+def test_sketch_key_stable_across_hash_seeds():
+    """The count-min sketch must key shapes by a process-stable digest,
+    not ``hash()``: PYTHONHASHSEED salts tuple hashes per process, so a
+    monitor restored in a new process (plan lifecycle layer) would
+    silently lose every evicted shape's sketch mass on re-admission."""
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    import repro
+    from repro.online.monitor import sketch_key
+
+    code = QueryGraph.make([(V(0), V(1), 3), (V(1), V(2), 1)]
+                           ).canonical_code()
+    expected = sketch_key(code)
+    prog = ("from repro.core.query import QueryGraph;"
+            "from repro.online.monitor import sketch_key;"
+            "q = QueryGraph.make([(-1, -2, 3), (-2, -3, 1)]);"
+            "print(sketch_key(q.canonical_code()))")
+    src = str(Path(list(repro.__path__)[0]).resolve().parent)
+    for seed in ("0", "4242"):
+        env = dict(os.environ, PYTHONHASHSEED=seed, PYTHONPATH=src)
+        out = subprocess.run([sys.executable, "-c", prog], env=env,
+                             capture_output=True, text=True, check=True)
+        assert int(out.stdout.strip()) == expected, \
+            f"sketch key drifted under PYTHONHASHSEED={seed}"
+
+
+def test_monitor_state_round_trip_preserves_statistics():
+    """state()/from_state() round-trips every decayed statistic -- shape
+    table, sketch (including evicted-shape mass), property and site
+    masses, reservoir, decay unit -- so a restored monitor behaves
+    identically to the original (modulo reservoir-replacement RNG)."""
+    mon = WorkloadMonitor(num_properties=8, decay=0.99, capacity=2,
+                          reservoir_size=16)
+    shapes = [QueryGraph.make([(V(0), V(1), p)]) for p in range(4)]
+    for i in range(30):
+        for p, q in enumerate(shapes):
+            mon.observe(q, sites=[p % 3])
+    assert len(mon.shapes) == 2          # capacity 2 forced evictions
+
+    clone = WorkloadMonitor.from_state(mon.state())
+    u1, w1 = mon.snapshot()
+    u2, w2 = clone.snapshot()
+    assert ([q.canonical_code() for q in u1]
+            == [q.canonical_code() for q in u2])
+    assert np.array_equal(w1, w2)
+    assert np.allclose(mon.property_distribution(),
+                       clone.property_distribution())
+    assert clone.site_heat() == mon.site_heat()
+    assert clone.queries_seen == mon.queries_seen
+    assert clone.effective_weight() == pytest.approx(mon.effective_weight())
+    assert len(clone.raw_sample()) == len(mon.raw_sample())
+
+    # the sketch survived: re-observing an evicted shape must re-admit
+    # the same remembered mass in both monitors (this is exactly what a
+    # hash()-keyed sketch loses across processes)
+    evicted = next(q for q in shapes
+                   if q.normalize().canonical_code() not in mon.shapes)
+    mon.observe(evicted)
+    clone.observe(evicted)
+    _, w1 = mon.snapshot()
+    _, w2 = clone.snapshot()
+    assert np.array_equal(w1, w2)
+    code = evicted.normalize().canonical_code()
+    assert clone.shapes[code].sketch_base > 0.0
+    assert clone.shapes[code].sketch_base == mon.shapes[code].sketch_base
+
+
 # ----------------------------------------------------------------------
 # Drift detection
 # ----------------------------------------------------------------------
@@ -281,6 +351,49 @@ def test_adaptive_engine_recomputes_replication_on_repartition(watdiv_small):
     st = eng.stats()
     assert st.extra["replicated_props"] == len(eng.replicated_props)
     assert st.extra["replica_bytes"] == eng.total_replica_bytes
+
+
+def test_refragment_dispatches_through_strategy_registry():
+    """Re-fragmentation must route through the StrategyRegistry's
+    refragment hooks, not a hardcoded vertical/horizontal if-else: a
+    registered strategy *without* a hook is rejected with the
+    hook-bearing kinds listed, and registering a hook is all it takes
+    for a new strategy to join the adaptive loop."""
+    from repro.core.fragmentation import vertical_fragmentation
+    from repro.core.plan import STRATEGIES
+
+    g = generate_watdiv(2000, seed=3)
+    wl = generate_drifting_workload(g, [(200, {})], seed=5)
+    base = WorkloadPartitioner(
+        g, wl, PartitionConfig(kind="vertical", num_sites=4)).run()
+    mon = WorkloadMonitor(g.num_properties, decay=0.995, capacity=128)
+    mon.bulk_load(wl)
+
+    @STRATEGIES.register("dummy-rf")
+    def _dummy_builder(graph, workload, cfg):     # pragma: no cover
+        raise AssertionError("builder is not exercised here")
+
+    try:
+        cfg = PartitionConfig(kind="dummy-rf", num_sites=4)
+        with pytest.raises(ValueError) as ei:
+            refragment(g, mon, cfg, base.selected_patterns)
+        msg = str(ei.value)
+        assert "dummy-rf" in msg
+        # the error lists the kinds that DO carry a hook
+        assert "vertical" in msg and "horizontal" in msg
+
+        @STRATEGIES.register_refragment("dummy-rf")
+        def _dummy_refragment(graph, selected, sample, c, cold_ids, index):
+            return vertical_fragmentation(graph, selected, cold_ids,
+                                          c.num_cold_parts, index=index,
+                                          max_rows=c.max_rows)
+
+        res = refragment(g, mon, cfg, base.selected_patterns)
+        assert res.frag.coverage_ok(g)
+    finally:
+        STRATEGIES.unregister("dummy-rf")
+    assert "dummy-rf" not in STRATEGIES
+    assert "dummy-rf" not in STRATEGIES.refragment_names()
 
 
 def test_refragment_warm_start_keeps_incumbents(refrag_setup):
